@@ -1,0 +1,49 @@
+"""Kernel microbench: per-strategy interpret-mode wall time (harness check)
+plus the modeled v5e bytes/time per strategy for the paper's canonical GEMM
+shapes (decode GEMV and prefill GEMM)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gptq
+from repro.core.opt_strategies import STRATEGIES
+from repro.core.perf_model import gptq_matmul_cost
+from repro.kernels import ops
+
+SHAPES = [
+    ("decode_gemv", 8, 1024, 1024, 128),
+    ("prefill_gemm", 128, 1024, 512, 128),
+]
+
+
+def run():
+    lines = []
+    rng = np.random.default_rng(0)
+    for name, m, k, n, g in SHAPES:
+        w = jnp.asarray(rng.normal(0, 0.5, (k, n)).astype(np.float32))
+        ql = gptq.gptq_quantize(w, None, gptq.GPTQConfig(group_size=g))
+        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        for s, strat in STRATEGIES.items():
+            cost = gptq_matmul_cost(m, k, n, group_size=g, strategy=strat)
+            fn = lambda: ops.gptq_linear(ql, x, strategy=strat,
+                                         use_pallas=True,
+                                         block_sizes=(8, 256, 256))
+            fn()  # compile/warm
+            t0 = time.time()
+            reps = 3
+            for _ in range(reps):
+                jax.block_until_ready(fn())
+            us = (time.time() - t0) / reps * 1e6
+            lines.append(
+                f"kernel/{name}/{s},{us:.0f},"
+                f"model_us={cost.time_s * 1e6:.2f}|hbm_kb={cost.hbm_bytes / 1e3:.0f}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,0 +1,43 @@
+"""Roofline table from the dry-run result cache (experiments/dryrun/*.json):
+one row per (arch x shape x mesh) cell — the EXPERIMENTS.md §Roofline source."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_records():
+    recs = []
+    for f in sorted(RESULTS.glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def run():
+    lines = []
+    ok = skip = fail = 0
+    for r in load_records():
+        if r["status"] == "skipped":
+            skip += 1
+            continue
+        if r["status"] == "failed":
+            fail += 1
+            lines.append(f"dryrun/{r['cell']},0,FAILED")
+            continue
+        ok += 1
+        ro = r["roofline"]
+        lines.append(
+            f"roofline/{r['cell']},0,"
+            f"compute_s={ro['compute_s']:.4f}|mem_s={ro['memory_s']:.4f}|"
+            f"coll_s={ro['collective_s']:.4f}|dom={ro['dominant']}|"
+            f"useful={ro['useful_ratio']:.3f}|mem_gb={r['memory']['total_gb']:.2f}|"
+            f"fits={int(r['memory']['fits_16gb'])}")
+    lines.append(f"dryrun/summary,0,ok={ok}|skipped={skip}|failed={fail}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,0 +1,38 @@
+"""Benchmark driver — one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  figs 2-3  : bench_paper_figs  (throughput/latency per model x strategy)
+  tables1-2 : bench_accuracy    (ppl fp16 vs GPTQ vs RTN; strategy agreement)
+  kernels   : bench_kernels     (per-strategy micro costs)
+  roofline  : roofline_table    (dry-run derived roofline per cell)
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    sections = []
+    from benchmarks import bench_kernels, bench_paper_figs, bench_accuracy, \
+        roofline_table
+    sections = [
+        ("kernels", bench_kernels.run),
+        ("paper_figs", bench_paper_figs.run),
+        ("accuracy", bench_accuracy.run),
+        ("roofline", roofline_table.run),
+    ]
+    failed = 0
+    for name, fn in sections:
+        try:
+            for line in fn():
+                print(line, flush=True)
+        except Exception as e:
+            failed += 1
+            print(f"{name}/ERROR,0,{e!r}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,185 @@
+"""Sharded, async, atomic checkpointing.
+
+Layout:  <dir>/step_<N>/
+           manifest.msgpack     — tree structure, shapes, dtypes, QuantizedLinear
+                                  metadata, step, save wall-time
+           arr_<i>.npy          — one file per leaf (per-host shards on real
+                                  multi-host; full arrays in this container)
+         <dir>/step_<N>.COMMIT  — atomic commit marker (rename-after-write)
+
+Fault-tolerance contract: a checkpoint without its COMMIT marker is ignored at
+restore (torn writes from a killed process can never be resumed into).
+Async: `save(..., blocking=False)` snapshots to host RAM synchronously and
+writes in a background thread — the train loop stalls only for the device->host
+copy (straggler mitigation at scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+from repro.core.gptq import QuantizedLinear
+
+
+def _is_ql(x):
+    return isinstance(x, QuantizedLinear)
+
+
+def _flatten(tree):
+    return jax.tree_util.tree_flatten_with_path(tree, is_leaf=_is_ql)
+
+
+def _path_str(path) -> str:
+    out = []
+    for e in path:
+        out.append(str(getattr(e, "key", getattr(e, "name", getattr(e, "idx", e)))))
+    return "/".join(out)
+
+
+class Checkpointer:
+    def __init__(self, directory: str | pathlib.Path, *, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    # ---------------------------------------------------------------- internal
+    def _write(self, step_dir: pathlib.Path, leaves, meta):
+        tmp = step_dir.with_suffix(".tmp")
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        for i, arr in enumerate(leaves):
+            np.save(tmp / f"arr_{i}.npy", arr, allow_pickle=False)
+        (tmp / "manifest.msgpack").write_bytes(msgpack.packb(meta))
+        if step_dir.exists():
+            shutil.rmtree(step_dir)
+        tmp.rename(step_dir)
+        commit = step_dir.parent / (step_dir.name + ".COMMIT")
+        commit.write_text(str(time.time()))
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+            (self.dir / f"step_{s}.COMMIT").unlink(missing_ok=True)
+
+    # ------------------------------------------------------------------- save
+    def save(self, step: int, tree: Any, *, blocking: bool = True,
+             extra: dict | None = None):
+        """Snapshot to host, then write (optionally in the background)."""
+        self.wait()
+        paths_leaves, treedef = _flatten(tree)
+        records, arrays = [], []
+        for path, leaf in paths_leaves:
+            if _is_ql(leaf):
+                sub = {"qweight": leaf.qweight, "scales": leaf.scales,
+                       "qzeros": leaf.qzeros, "perm": leaf.perm,
+                       "bias": leaf.bias}
+                present = {k: v is not None for k, v in sub.items()}
+                records.append({"path": _path_str(path), "kind": "quantized",
+                                "present": present,
+                                "shape": list(leaf.shape),
+                                "group_size": leaf.group_size})
+                for k, v in sub.items():
+                    if v is not None:
+                        arrays.append(np.asarray(v))
+            else:
+                records.append({"path": _path_str(path), "kind": "array"})
+                arrays.append(np.asarray(leaf))
+        meta = {"step": step, "records": records, "extra": extra or {},
+                "saved_at": time.time()}
+        step_dir = self.dir / f"step_{step}"
+        if blocking:
+            self._write(step_dir, arrays, meta)
+        else:
+            self._thread = threading.Thread(
+                target=self._write, args=(step_dir, arrays, meta), daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ---------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for c in self.dir.glob("step_*.COMMIT"):
+            name = c.name[:-len(".COMMIT")]
+            if (self.dir / name).exists():
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: int | None = None,
+                shardings: Any = None) -> tuple[Any, dict]:
+        """Restore into the *structure* of ``template`` (elastic: arrays are
+        re-sharded onto ``shardings`` if given — mesh shape may differ from
+        the one that saved). Returns (tree, extra)."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        step_dir = self.dir / f"step_{step}"
+        meta = msgpack.unpackb((step_dir / "manifest.msgpack").read_bytes())
+        paths_leaves, treedef = _flatten(template)
+        shard_leaves = (jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda s: hasattr(s, "spec"))
+            if shardings is not None else [None] * len(paths_leaves))
+
+        by_path = {}
+        i = 0
+        for rec in meta["records"]:
+            if rec["kind"] == "quantized":
+                sub = {}
+                for k in ("qweight", "scales", "qzeros", "perm", "bias"):
+                    if rec["present"][k]:
+                        sub[k] = np.load(step_dir / f"arr_{i}.npy")
+                        i += 1
+                    else:
+                        sub[k] = None
+                by_path[rec["path"]] = ("quantized", sub, rec)
+            else:
+                by_path[rec["path"]] = ("array", np.load(step_dir / f"arr_{i}.npy"), None)
+                i += 1
+
+        out = []
+        qi = 0
+        for (path, leaf), shard in zip(paths_leaves, shard_leaves):
+            key = _path_str(path)
+            if key not in by_path:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            kind, data, rec = by_path[key]
+            if kind == "quantized":
+                put = (lambda a: jax.device_put(a, shard)
+                       if shard is not None else jnp.asarray(a))
+                out.append(QuantizedLinear(
+                    qweight=jnp.asarray(data["qweight"]),
+                    scales=jnp.asarray(data["scales"]),
+                    qzeros=jnp.asarray(data["qzeros"]),
+                    perm=None if data["perm"] is None else jnp.asarray(data["perm"]),
+                    bias=None if data["bias"] is None else jnp.asarray(data["bias"]),
+                    shape=tuple(rec["shape"]), group_size=rec["group_size"]))
+            else:
+                arr = data
+                if shard is not None:
+                    out.append(jax.device_put(arr, shard))
+                else:
+                    out.append(jnp.asarray(arr))
+        tree = jax.tree_util.tree_unflatten(treedef, out)
+        return tree, meta.get("extra", {})

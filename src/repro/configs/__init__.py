@@ -1,0 +1,3 @@
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.configs.registry import (ARCH_IDS, PAPER_MODEL_IDS, applicable,
+                                    get_config, input_specs, smoke_config)

@@ -1,0 +1,175 @@
+"""Model / run configuration dataclasses."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+
+    # attention options
+    attn_type: str = "gqa"           # gqa | mla | none
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    sliding_window: int = 0          # 0 -> full attention
+    global_attn_layers: tuple[int, ...] = ()   # layers exempt from SWA
+    rope_theta: float = 10_000.0
+    mrope_sections: tuple[int, ...] | None = None   # qwen2-vl M-RoPE
+
+    # MLA (deepseek)
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+    # norm / activation
+    norm_type: str = "rmsnorm"       # rmsnorm | layernorm
+    act: str = "swiglu"              # swiglu | sq_relu
+    norm_eps: float = 1e-6
+
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0      # leading layers with dense FFN
+    router_aux_loss: float = 0.01
+    capacity_factor: float = 1.25
+    # dispatch locality groups: tokens rank/scatter within each group so the
+    # scatter never crosses data-parallel shards (set = dp shards at launch;
+    # 1 = global dispatch). See models/ffn.py and EXPERIMENTS.md §Perf.
+    moe_dispatch_groups: int = 1
+    # "einsum": GSPMD-auto dispatch (baseline). "ep": shard_map expert
+    # parallelism — per-shard dispatch buckets exchanged with all_to_all over
+    # the model axis (EXPERIMENTS.md §Perf cell A).
+    moe_impl: str = "einsum"
+
+    # SSM (mamba-1)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    dt_rank: int = 0                 # 0 -> ceil(d_model / 16)
+
+    # hybrid (hymba)
+    meta_tokens: int = 0
+
+    # embedding / head
+    tie_embeddings: bool = False
+    is_encoder: bool = False         # encoder-only (no causal mask, no decode)
+    frontend: str | None = None      # None | "audio" | "vision" (stub embeddings)
+
+    # attention memory tiling (query rows per logits block; see models/attention.py)
+    attn_q_chunk: int = 2048
+
+    # numerics
+    dtype: Any = "bfloat16"
+    remat: str = "full"              # none | full | dots (activation ckpt policy)
+    scan_layers: bool = True         # lax.scan over layers (O(1) HLO)
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))
+        if self.dt_rank == 0 and self.family in ("ssm", "hybrid"):
+            object.__setattr__(self, "dt_rank", -(-self.d_model // 16))
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def moe_layers(self) -> int:
+        return self.num_layers - self.first_dense_layers if self.num_experts else 0
+
+    @property
+    def uses_attention(self) -> bool:
+        return self.attn_type != "none"
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for MODEL_FLOPS = 6 N D)."""
+        return _param_count(self)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: shared + top-k experts only)."""
+        return _param_count(self, active_only=True)
+
+
+def _ffn_params(cfg: ModelConfig, d_ff: int) -> int:
+    if cfg.act == "swiglu":
+        return 3 * cfg.d_model * d_ff
+    return 2 * cfg.d_model * d_ff          # sq_relu: up + down
+
+
+def _attn_params(cfg: ModelConfig) -> int:
+    d, hd = cfg.d_model, cfg.head_dim
+    if cfg.attn_type == "mla":
+        q = d * cfg.num_heads * (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+        kv_a = d * (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+        kv_b = cfg.kv_lora_rank * cfg.num_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim)
+        o = cfg.num_heads * cfg.v_head_dim * d
+        return q + kv_a + kv_b + o
+    if cfg.attn_type == "none":
+        return 0
+    qkv = d * hd * (cfg.num_heads + 2 * cfg.num_kv_heads)
+    return qkv + cfg.num_heads * hd * d
+
+
+def _ssm_params(cfg: ModelConfig) -> int:
+    di, s, dr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    return (cfg.d_model * 2 * di            # in_proj (x, z)
+            + di * cfg.ssm_conv             # depthwise conv
+            + di * (dr + 2 * s)             # x_proj
+            + dr * di + di                  # dt_proj
+            + di * s + di                   # A_log, D
+            + di * cfg.d_model)             # out_proj
+
+
+def _param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    per_layer_attn = _attn_params(cfg) if cfg.uses_attention else 0
+    if cfg.family == "ssm":
+        per_layer = _ssm_params(cfg)
+    elif cfg.family == "hybrid":
+        per_layer = per_layer_attn + _ssm_params(cfg) + _ffn_params(cfg, cfg.d_ff)
+    elif cfg.num_experts:
+        experts = cfg.num_experts_per_tok if active_only else cfg.num_experts
+        moe = (experts + cfg.num_shared_experts) * _ffn_params(cfg, cfg.moe_d_ff)
+        moe += cfg.d_model * cfg.num_experts      # router
+        per_layer = per_layer_attn + moe
+    else:
+        per_layer = per_layer_attn + _ffn_params(cfg, cfg.d_ff)
+
+    total = cfg.num_layers * per_layer
+    if cfg.num_experts and cfg.first_dense_layers:
+        dense_ffn = _ffn_params(cfg, cfg.d_ff)
+        experts = cfg.num_experts_per_tok if active_only else cfg.num_experts
+        moe = ((experts + cfg.num_shared_experts) * _ffn_params(cfg, cfg.moe_d_ff)
+               + cfg.d_model * cfg.num_experts)
+        total += cfg.first_dense_layers * (dense_ffn - moe)
+    total += cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,16 @@
+"""DeepSeek-V2-Lite 16B [arXiv:2405.04434]: MLA (kv_lora=512) + MoE 64 routed
+top-6 + 2 shared experts, first layer dense. (The assignment note's "160
+routed" is full DeepSeek-V2's count; the primary spec "64e top-6" is
+V2-Lite's published config and is used here — see DESIGN.md.)"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b", family="moe",
+    num_layers=27, d_model=2048, num_heads=16, num_kv_heads=16,
+    head_dim=192, d_ff=10944, vocab_size=102400,
+    attn_type="mla", kv_lora_rank=512, qk_nope_head_dim=128,
+    qk_rope_head_dim=64, v_head_dim=128,
+    num_experts=64, num_experts_per_tok=6, num_shared_experts=2,
+    moe_d_ff=1408, first_dense_layers=1, rope_theta=10_000.0,
+    moe_impl="ep",      # shard_map expert-parallel (EXPERIMENTS.md §Perf cell A)
+)

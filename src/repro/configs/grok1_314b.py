@@ -1,0 +1,12 @@
+"""Grok-1 314B [hf:xai-org/grok-1]: MoE 8 experts top-2, GQA kv=8."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b", family="moe",
+    num_layers=64, d_model=6144, num_heads=48, num_kv_heads=8,
+    head_dim=128, d_ff=32768, vocab_size=131072,
+    num_experts=8, num_experts_per_tok=2, moe_d_ff=32768,
+    rope_theta=10_000.0,
+    attn_q_chunk=512,   # see qwen1p5_110b note
+    moe_impl="ep",      # shard_map expert-parallel (EXPERIMENTS.md §Perf cell A)
+)

@@ -1,0 +1,11 @@
+"""HuBERT-XLarge [arXiv:2106.07447]: encoder-only audio transformer; the conv
+waveform frontend is a STUB (input_specs provides precomputed frame
+embeddings). vocab = 504 masked-prediction codebook classes."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge", family="audio",
+    num_layers=48, d_model=1280, num_heads=16, num_kv_heads=16,
+    head_dim=80, d_ff=5120, vocab_size=504,
+    is_encoder=True, frontend="audio", norm_type="layernorm", act="sq_relu",
+)

@@ -1,0 +1,12 @@
+"""Hymba-1.5B [arXiv:2411.13676]: hybrid parallel attention+mamba heads,
+SWA(1024) with 3 global-attention layers, 128 meta tokens (attention sinks),
+GQA kv=5. ssm_state=16."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b", family="hybrid",
+    num_layers=32, d_model=1600, num_heads=25, num_kv_heads=5,
+    head_dim=64, d_ff=5504, vocab_size=32001,
+    sliding_window=1024, global_attn_layers=(0, 15, 31),
+    meta_tokens=128, ssm_state=16, ssm_conv=4, ssm_expand=2,
+)

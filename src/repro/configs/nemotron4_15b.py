@@ -1,0 +1,9 @@
+"""Nemotron-4-15B [arXiv:2402.16819]: GQA kv=8, squared-ReLU MLP, LayerNorm."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b", family="dense",
+    num_layers=32, d_model=6144, num_heads=48, num_kv_heads=8,
+    head_dim=128, d_ff=24576, vocab_size=256000,
+    act="sq_relu", norm_type="layernorm", rope_theta=10_000.0,
+)

@@ -1,0 +1,48 @@
+"""The paper's six evaluation models (vLLM + GPTQ-int4 on the HYGON DCU;
+Figs. 2-3, Tables I-II), as exact published configs for the benchmark harness."""
+from repro.configs.base import ModelConfig
+
+QWEN1P5_4B_CHAT = ModelConfig(
+    name="qwen1.5-4b-chat-gptq-int4", family="dense",
+    num_layers=40, d_model=2560, num_heads=20, num_kv_heads=20,
+    head_dim=128, d_ff=6912, vocab_size=151936, qkv_bias=True,
+    rope_theta=5_000_000.0,
+)
+QWEN1P5_1P8B_CHAT = ModelConfig(
+    name="qwen1.5-1.8b-chat-gptq-int4", family="dense",
+    num_layers=24, d_model=2048, num_heads=16, num_kv_heads=16,
+    head_dim=128, d_ff=5504, vocab_size=151936, qkv_bias=True,
+    rope_theta=1_000_000.0,
+)
+LLAMA_13B = ModelConfig(
+    name="llama-13b-gptq", family="dense",
+    num_layers=40, d_model=5120, num_heads=40, num_kv_heads=40,
+    head_dim=128, d_ff=13824, vocab_size=32000,
+)
+CODELLAMA_7B = ModelConfig(
+    name="codellama-7b-gptq", family="dense",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=32,
+    head_dim=128, d_ff=11008, vocab_size=32016, rope_theta=1_000_000.0,
+)
+LLAMA2_7B = ModelConfig(
+    name="llama-2-7b-gptq", family="dense",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=32,
+    head_dim=128, d_ff=11008, vocab_size=32000,
+)
+LLAMA3_8B = ModelConfig(
+    name="meta-llama-3-8b-gptq", family="dense",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+    head_dim=128, d_ff=14336, vocab_size=128256, rope_theta=500_000.0,
+)
+
+PAPER_MODELS = {
+    "qwen1p5_4b_chat": QWEN1P5_4B_CHAT,
+    "qwen1p5_1p8b_chat": QWEN1P5_1P8B_CHAT,
+    "llama_13b": LLAMA_13B,
+    "codellama_7b": CODELLAMA_7B,
+    "llama2_7b": LLAMA2_7B,
+    "llama3_8b": LLAMA3_8B,
+}
+# display order used in the paper's figures
+PAPER_ORDER = ["qwen1p5_4b_chat", "qwen1p5_1p8b_chat", "llama_13b",
+               "codellama_7b", "llama2_7b", "llama3_8b"]

@@ -1,0 +1,12 @@
+"""Qwen2-VL-7B [arXiv:2409.12191]: GQA kv=4 with M-RoPE (t/h/w sections),
+dynamic-resolution vision frontend STUBBED (input_specs provides patch
+embeddings + splice mask)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b", family="vlm",
+    num_layers=28, d_model=3584, num_heads=28, num_kv_heads=4,
+    head_dim=128, d_ff=18944, vocab_size=152064,
+    qkv_bias=True, frontend="vision", mrope_sections=(16, 24, 24),
+    rope_theta=1_000_000.0,
+)

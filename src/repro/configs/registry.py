@@ -1,0 +1,107 @@
+"""Architecture registry: the 10 assigned architectures (exact published
+configs), the paper's 6 benchmark models, reduced smoke-test variants, and
+``input_specs()`` producing ShapeDtypeStruct stand-ins for the dry-run."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+
+ARCH_IDS = [
+    "hymba_1p5b", "qwen1p5_110b", "codeqwen1p5_7b", "nemotron4_15b",
+    "qwen3_4b", "grok1_314b", "deepseek_v2_lite_16b", "hubert_xlarge",
+    "falcon_mamba_7b", "qwen2_vl_7b",
+]
+
+# paper's six evaluation models (Figs. 2-3, Tables I-II)
+PAPER_MODEL_IDS = [
+    "qwen1p5_4b_chat", "qwen1p5_1p8b_chat", "llama_13b", "codellama_7b",
+    "llama2_7b", "llama3_8b",
+]
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = arch.replace("-", "_").replace(".", "p")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def smoke_config(arch: str) -> ModelConfig:
+    """Reduced same-family config: small widths/layers/experts, tiny vocab."""
+    cfg = get_config(arch)
+    heads = min(cfg.num_heads, 4)
+    kv = min(cfg.num_kv_heads, heads) or heads
+    upd = dict(
+        num_layers=min(cfg.num_layers, 4 if not cfg.global_attn_layers else 5),
+        d_model=128, num_heads=heads, num_kv_heads=kv, head_dim=32,
+        d_ff=256 if cfg.d_ff else 0, vocab_size=512,
+        dtype="float32", remat="none",
+    )
+    if cfg.num_experts:
+        # capacity_factor = E guarantees cap >= topk*T: no token drops, so
+        # decode and full-forward are bit-comparable in tests
+        upd.update(num_experts=4,
+                   num_experts_per_tok=min(cfg.num_experts_per_tok, 2),
+                   moe_d_ff=64, capacity_factor=4.0)
+    if cfg.attn_type == "mla":
+        upd.update(kv_lora_rank=32, qk_nope_head_dim=32, qk_rope_head_dim=16,
+                   v_head_dim=32)
+    if cfg.global_attn_layers:
+        upd.update(global_attn_layers=(0, 2, 4), sliding_window=16)
+    if cfg.meta_tokens:
+        upd.update(meta_tokens=8)
+    if cfg.mrope_sections:
+        upd.update(mrope_sections=(4, 6, 6))   # sums to head_dim//2 = 16
+    return dataclasses.replace(cfg, **upd)
+
+
+# ------------------------------------------------------------------ input specs
+def _sds(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Shape-skip rules (DESIGN.md §4)."""
+    if cfg.is_encoder and shape.kind == "decode":
+        return False, "encoder-only: no autoregressive decode step"
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, "pure full-attention arch: 500k dense KV excluded (sub-quadratic required)"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                batch_override: int | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    train  : tokens + labels (+frontend embeds)
+    prefill: tokens (engine provides cache separately)
+    decode : one new token per sequence
+    """
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    act_dtype = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        specs = {"tokens": _sds((b, s)), "labels": _sds((b, s))}
+    elif shape.kind == "prefill":
+        specs = {"tokens": _sds((b, s))}
+    else:  # decode: one new token, cache of length seq_len handled by caller
+        specs = {"tokens": _sds((b, 1))}
+
+    toks = specs["tokens"].shape[1]
+    if cfg.frontend == "audio":
+        # HuBERT stub frontend: precomputed frame embeddings replace tokens
+        specs["input_embeds"] = _sds((b, toks, cfg.d_model), act_dtype)
+        if shape.kind == "train":
+            specs["loss_mask"] = _sds((b, s), jnp.float32)
+    elif cfg.frontend == "vision" and shape.kind != "decode":
+        # qwen2-vl stub: patch embeddings spliced where embed_mask is set
+        specs["input_embeds"] = _sds((b, toks, cfg.d_model), act_dtype)
+        specs["embed_mask"] = _sds((b, toks), jnp.bool_)
+    if cfg.mrope_sections:
+        nmeta = cfg.meta_tokens if shape.kind != "decode" else 0
+        specs["positions"] = _sds((3, b, toks + nmeta))
+    return specs

@@ -1,0 +1,216 @@
+"""GPTQ: accurate post-training 4-bit quantization (Frantar et al., 2022) in JAX.
+
+Quantizes ``W`` of a linear layer ``y = x @ W`` (W: (K, N), K = in_features)
+column-group-wise along K using approximate second-order information:
+
+    H     = 2/nsamples * sum_i x_i x_i^T           (K, K)  input Hessian
+    U     = chol_upper(H^{-1})                      (via damped Cholesky)
+    for each input row k (in act-order if enabled):
+        q_k   = clamp(round(w_k / s_g) + z_g)       group-wise asymmetric grid
+        err_k = (w_k - dequant(q_k)) / U[k, k]
+        W[k+1:, :] -= U[k, k+1:]^T err_k            (error feedback)
+
+Outputs the AutoGPTQ interchange layout (see ``core/packing.py``):
+``qweight (K//8, N) int32``, ``scales (K//G, N)``, ``qzeros (K//G, N//8) int32``,
+plus ``perm (K,) int32`` when act-order is on (the paper kernel's ``b_q_perm``).
+
+Note: we use the modern zero-point convention (no AutoGPTQ legacy ``z-1`` bias).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+
+
+@dataclasses.dataclass(frozen=True)
+class GPTQConfig:
+    bits: int = 4
+    group_size: int = 128          # -1 => one group for the whole K axis
+    act_order: bool = False        # quantize high-curvature rows first (desc diag H)
+    percdamp: float = 0.01         # Hessian damping fraction of mean diag
+    sym: bool = False              # symmetric grid (zero fixed at 2^(b-1))
+    scale_dtype: Any = jnp.float32
+
+    @property
+    def qmax(self) -> int:
+        return (1 << self.bits) - 1
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["qweight", "scales", "qzeros", "perm", "bias"],
+    meta_fields=["shape", "group_size"])
+@dataclasses.dataclass
+class QuantizedLinear:
+    """Pytree holding one GPTQ-quantized weight matrix (+ optional bias).
+    Registered as a dataclass pytree so tree paths carry field names (the
+    sharding rule engine keys on them)."""
+    qweight: jnp.ndarray           # (K//8, N) int32, row-packed nibbles
+    scales: jnp.ndarray            # (G, N)
+    qzeros: jnp.ndarray            # (G, N//8) int32, col-packed nibbles
+    perm: jnp.ndarray | None       # (K,) int32 act-order permutation or None
+    bias: jnp.ndarray | None
+    shape: tuple[int, int]         # (K, N) logical
+    group_size: int
+
+
+def quant_grid(w_group: jnp.ndarray, qmax: int, sym: bool):
+    """Per-column (N) asymmetric min/max grid over a (g, N) group of rows."""
+    wmax = jnp.maximum(w_group.max(axis=0), 0.0)
+    wmin = jnp.minimum(w_group.min(axis=0), 0.0)
+    if sym:
+        amax = jnp.maximum(wmax, -wmin)
+        scale = jnp.where(amax > 0, 2.0 * amax / qmax, 1.0)
+        zero = jnp.full_like(scale, (qmax + 1) // 2)
+    else:
+        rng = wmax - wmin
+        scale = jnp.where(rng > 0, rng / qmax, 1.0)
+        zero = jnp.clip(jnp.round(-wmin / scale), 0, qmax)
+    return scale, zero
+
+
+def quantize_rtn(w: jnp.ndarray, cfg: GPTQConfig):
+    """Round-to-nearest baseline (no error feedback) — the paper's implicit
+    'just quantize' comparison point and our property-test oracle."""
+    k, n = w.shape
+    g = cfg.group_size if cfg.group_size > 0 else k
+    assert k % g == 0
+    wg = w.reshape(k // g, g, n)
+    scales, zeros, qs = [], [], []
+    for i in range(k // g):
+        s, z = quant_grid(wg[i], cfg.qmax, cfg.sym)
+        q = jnp.clip(jnp.round(wg[i] / s[None, :]) + z[None, :], 0, cfg.qmax)
+        scales.append(s); zeros.append(z); qs.append(q)
+    q = jnp.concatenate(qs, axis=0).astype(jnp.int8)
+    return q, jnp.stack(scales), jnp.stack(zeros).astype(jnp.int8)
+
+
+def accumulate_hessian(h: jnp.ndarray | None, x: jnp.ndarray) -> jnp.ndarray:
+    """Running (unnormalized) Hessian accumulation 2 * X^T X over calib batches.
+
+    x: (..., K) activations feeding the linear; flattened over leading dims.
+    """
+    xf = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    update = 2.0 * (xf.T @ xf)
+    return update if h is None else h + update
+
+
+def _inv_hessian_chol(h: jnp.ndarray, percdamp: float) -> jnp.ndarray:
+    """U = chol_upper(H^{-1}) with damping and dead-column handling."""
+    k = h.shape[0]
+    diag = jnp.diagonal(h)
+    dead = diag == 0.0
+    h = h + jnp.diag(jnp.where(dead, 1.0, 0.0))
+    damp = percdamp * jnp.mean(jnp.where(dead, 0.0, diag))
+    h = h + damp * jnp.eye(k, dtype=h.dtype)
+    hinv = jnp.linalg.inv(h)  # (sym PD after damping)
+    # upper Cholesky: chol(hinv) lower -> transpose
+    u = jnp.linalg.cholesky(hinv).T
+    return u
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "qmax", "sym"))
+def _gptq_core(w: jnp.ndarray, u: jnp.ndarray, *, group_size: int, qmax: int,
+               sym: bool):
+    """Sequential row-wise GPTQ with error feedback. w: (K, N) fp32 (already
+    permuted if act-order). Returns (q (K,N) int8, scales (G,N), zeros (G,N))."""
+    k, n = w.shape
+    g = group_size
+    ngroups = k // g
+
+    def group_body(gi, carry):
+        w, q, scales, zeros = carry
+        w_grp = jax.lax.dynamic_slice_in_dim(w, gi * g, g, axis=0)
+        s, z = quant_grid(w_grp, qmax, sym)
+        scales = jax.lax.dynamic_update_slice_in_dim(scales, s[None], gi, axis=0)
+        zeros = jax.lax.dynamic_update_slice_in_dim(zeros, z[None], gi, axis=0)
+
+        def row_body(j, carry2):
+            w, q = carry2
+            i = gi * g + j
+            wi = jax.lax.dynamic_slice_in_dim(w, i, 1, axis=0)[0]      # (N,)
+            d = u[i, i]
+            qi = jnp.clip(jnp.round(wi / s) + z, 0, qmax)
+            dq = (qi - z) * s
+            err = (wi - dq) / d
+            # error feedback to rows > i (U is upper triangular: U[i, :i] = 0,
+            # and the i-th row itself is already quantized -> mask <= i)
+            urow = jnp.where(jnp.arange(k) > i, u[i, :], 0.0)
+            w = w - urow[:, None] * err[None, :]
+            q = jax.lax.dynamic_update_slice_in_dim(
+                q, qi[None].astype(jnp.int8), i, axis=0)
+            return w, q
+
+        w, q = jax.lax.fori_loop(0, g, row_body, (w, q))
+        return w, q, scales, zeros
+
+    q0 = jnp.zeros((k, n), jnp.int8)
+    s0 = jnp.zeros((ngroups, n), jnp.float32)
+    z0 = jnp.zeros((ngroups, n), jnp.float32)
+    _, q, scales, zeros = jax.lax.fori_loop(
+        0, ngroups, group_body, (w, q0, s0, z0))
+    return q, scales, zeros.astype(jnp.int8)
+
+
+def gptq_quantize(w: jnp.ndarray, hessian: jnp.ndarray | None,
+                  cfg: GPTQConfig = GPTQConfig(),
+                  bias: jnp.ndarray | None = None) -> QuantizedLinear:
+    """Quantize one (K, N) weight matrix. ``hessian=None`` -> identity (RTN+EF)."""
+    k, n = w.shape
+    g = cfg.group_size if cfg.group_size > 0 else k
+    assert k % g == 0, f"K={k} not divisible by group_size={g}"
+    assert k % 8 == 0 and n % 8 == 0, f"K,N must be multiples of 8, got {w.shape}"
+    w = w.astype(jnp.float32)
+    h = jnp.eye(k, dtype=jnp.float32) if hessian is None else hessian.astype(jnp.float32)
+
+    perm = None
+    if cfg.act_order:
+        perm = jnp.argsort(-jnp.diagonal(h)).astype(jnp.int32)
+        w = w[perm, :]
+        h = h[perm][:, perm]
+
+    u = _inv_hessian_chol(h, cfg.percdamp)
+    q, scales, zeros = _gptq_core(w, u, group_size=g, qmax=cfg.qmax, sym=cfg.sym)
+
+    return QuantizedLinear(
+        qweight=packing.pack_int4_rows(q),
+        scales=scales.astype(cfg.scale_dtype),
+        qzeros=packing.pack_int4_cols(zeros),
+        perm=perm,
+        bias=bias,
+        shape=(k, n),
+        group_size=g,
+    )
+
+
+def dequantize(ql: QuantizedLinear, dtype=jnp.float32) -> jnp.ndarray:
+    """Reference full dequantization back to (K, N) in *original* row order."""
+    k, n = ql.shape
+    q = packing.unpack_int4_rows(ql.qweight, k).astype(jnp.float32)       # (K, N)
+    z = packing.unpack_int4_cols(ql.qzeros, n).astype(jnp.float32)        # (G, N)
+    s = ql.scales.astype(jnp.float32)                                     # (G, N)
+    g = ql.group_size
+    w = (q.reshape(k // g, g, n) - z[:, None, :]) * s[:, None, :]
+    w = w.reshape(k, n)
+    if ql.perm is not None:
+        inv = jnp.argsort(ql.perm)
+        w = w[inv, :]
+    return w.astype(dtype)
+
+
+def quantization_error(w: jnp.ndarray, ql: QuantizedLinear,
+                       hessian: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Proxy loss: tr((W-Wq)^T H (W-Wq)) / tr(W^T H W) (H=I if None)."""
+    dw = (w.astype(jnp.float32) - dequantize(ql))
+    if hessian is None:
+        return jnp.sum(dw * dw) / jnp.maximum(jnp.sum(w.astype(jnp.float32) ** 2), 1e-9)
+    num = jnp.einsum("kn,kj,jn->", dw, hessian, dw)
+    den = jnp.einsum("kn,kj,jn->", w, hessian, w)
+    return num / jnp.maximum(den, 1e-9)

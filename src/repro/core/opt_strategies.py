@@ -1,0 +1,51 @@
+"""The paper's three optimizations as composable kernel strategy flags.
+
+Mapping (see DESIGN.md §2):
+
+* ``fused``       — False = vLLM-naive two-pass (dequant W4->bf16 to HBM, then a
+                    second matmul pass re-reads it).  All paper variants are fused.
+* ``accum_vmem``  — SMB-Opt analogue. True: fp32 VMEM scratch accumulator,
+                    K-innermost grid, single HBM writeback (`@pl.when(k==last)`).
+                    False: K-OUTERMOST grid so every K step revisits the output
+                    block through HBM (read-modify-write), the analogue of
+                    per-thread atomicAdd traffic on the DCU.
+* ``packed_loads``— VML-Opt analogue. True: weights loaded as packed int32 words
+                    (8 nibbles / word). False: pre-expanded int8 weights (2x HBM
+                    bytes, narrow loads).
+* ``mxu``         — ILA-Opt analogue. True: dequantized tile fed to the MXU
+                    (`jnp.dot`, f32 accum). False: VPU multiply+add loop over K
+                    (the compiler-scalar-code analogue).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelStrategy:
+    name: str
+    fused: bool = True
+    accum_vmem: bool = False
+    packed_loads: bool = False
+    mxu: bool = False
+
+
+# The paper's ablation grid (Figs. 2-3). "baseline" is vLLM's existing fused
+# exllama-style kernel with none of the three opts; "naive" is the strawman
+# unfused path (worse than the paper's baseline, included for the roofline).
+NAIVE = KernelStrategy("naive", fused=False, accum_vmem=False, packed_loads=False, mxu=True)
+BASELINE = KernelStrategy("baseline")
+SMB = KernelStrategy("smb", accum_vmem=True)
+VML = KernelStrategy("vml", packed_loads=True)
+ILA = KernelStrategy("ila", mxu=True)
+OPT4GPTQ = KernelStrategy("opt4gptq", accum_vmem=True, packed_loads=True, mxu=True)
+
+STRATEGIES = {s.name: s for s in [NAIVE, BASELINE, SMB, VML, ILA, OPT4GPTQ]}
+
+
+def get_strategy(name: str) -> KernelStrategy:
+    try:
+        return STRATEGIES[name]
+    except KeyError:
+        raise KeyError(f"unknown kernel strategy {name!r}; "
+                       f"available: {sorted(STRATEGIES)}") from None

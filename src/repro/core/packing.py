@@ -1,0 +1,88 @@
+"""int4 <-> int32 packing for GPTQ weights.
+
+Two layouts:
+
+* ``row_packed`` — the AutoGPTQ/exllama interchange format the paper's kernel
+  consumes: ``qweight[K // 8, N] : int32`` where word ``qweight[i, n]`` holds
+  nibbles for rows ``8*i .. 8*i+7`` of column ``n`` (row ``8*i`` in the least
+  significant nibble).  ``qzeros[K // group, N // 8] : int32`` packs zero points
+  along N.
+
+* ``lane_packed`` — the TPU-friendly layout used by the Pallas kernel's
+  VML-analogue: same row-major nibble order but kept as ``int32`` words along K
+  so a single (8,128) VMEM tile load brings 8x the weight rows.  It is the same
+  array as ``row_packed`` — the distinction is purely which axis the BlockSpec
+  tiles — so no repack cost is paid at load time.  The *unpacked* ``int8``
+  format (2x HBM bytes) exists only as the VML-off baseline.
+
+All functions are pure jnp and jittable; numpy twins are provided for
+checkpoint-side packing.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+NIBBLES_PER_WORD = 8  # 8 x int4 per int32
+
+
+def pack_int4_rows(w_int4: jnp.ndarray) -> jnp.ndarray:
+    """Pack int4 values (stored in an int8/int32 array, values in [0, 15]) along
+    axis 0 (the K axis) into int32 words: (K, N) -> (K//8, N)."""
+    k, n = w_int4.shape
+    assert k % NIBBLES_PER_WORD == 0, f"K={k} not divisible by 8"
+    w = w_int4.astype(jnp.uint32).reshape(k // NIBBLES_PER_WORD, NIBBLES_PER_WORD, n)
+    shifts = (4 * jnp.arange(NIBBLES_PER_WORD, dtype=jnp.uint32))[None, :, None]
+    packed = jnp.sum(w << shifts, axis=1, dtype=jnp.uint32)
+    return packed.astype(jnp.int32)
+
+
+def unpack_int4_rows(qweight: jnp.ndarray, k: int | None = None) -> jnp.ndarray:
+    """Unpack int32 words along axis 0 into int4 values: (K//8, N) -> (K, N) int8."""
+    kw, n = qweight.shape
+    q = qweight.astype(jnp.uint32)
+    shifts = (4 * jnp.arange(NIBBLES_PER_WORD, dtype=jnp.uint32))[None, :, None]
+    nib = (q[:, None, :] >> shifts) & jnp.uint32(0xF)
+    out = nib.reshape(kw * NIBBLES_PER_WORD, n).astype(jnp.int8)
+    if k is not None:
+        out = out[:k]
+    return out
+
+
+def pack_int4_cols(z_int4: jnp.ndarray) -> jnp.ndarray:
+    """Pack along axis 1 (N axis), AutoGPTQ qzeros layout: (G, N) -> (G, N//8)."""
+    g, n = z_int4.shape
+    assert n % NIBBLES_PER_WORD == 0, f"N={n} not divisible by 8"
+    z = z_int4.astype(jnp.uint32).reshape(g, n // NIBBLES_PER_WORD, NIBBLES_PER_WORD)
+    shifts = (4 * jnp.arange(NIBBLES_PER_WORD, dtype=jnp.uint32))[None, None, :]
+    return jnp.sum(z << shifts, axis=2, dtype=jnp.uint32).astype(jnp.int32)
+
+
+def unpack_int4_cols(qzeros: jnp.ndarray, n: int | None = None) -> jnp.ndarray:
+    """(G, N//8) int32 -> (G, N) int8."""
+    g, nw = qzeros.shape
+    q = qzeros.astype(jnp.uint32)
+    shifts = (4 * jnp.arange(NIBBLES_PER_WORD, dtype=jnp.uint32))[None, None, :]
+    nib = (q[:, :, None] >> shifts) & jnp.uint32(0xF)
+    out = nib.reshape(g, nw * NIBBLES_PER_WORD).astype(jnp.int8)
+    if n is not None:
+        out = out[:, :n]
+    return out
+
+
+# ---------------------------------------------------------------- numpy twins
+def np_pack_int4_rows(w_int4: np.ndarray) -> np.ndarray:
+    k, n = w_int4.shape
+    assert k % NIBBLES_PER_WORD == 0
+    w = w_int4.astype(np.uint32).reshape(k // NIBBLES_PER_WORD, NIBBLES_PER_WORD, n)
+    shifts = (4 * np.arange(NIBBLES_PER_WORD, dtype=np.uint32))[None, :, None]
+    return np.sum(w << shifts, axis=1, dtype=np.uint32).astype(np.int32)
+
+
+def np_unpack_int4_rows(qweight: np.ndarray, k: int | None = None) -> np.ndarray:
+    kw, n = qweight.shape
+    q = qweight.astype(np.uint32)
+    shifts = (4 * np.arange(NIBBLES_PER_WORD, dtype=np.uint32))[None, :, None]
+    nib = (q[:, None, :] >> shifts) & np.uint32(0xF)
+    out = nib.reshape(kw * NIBBLES_PER_WORD, n).astype(np.int8)
+    return out if k is None else out[:k]

@@ -1,0 +1,160 @@
+"""Analytic TPU-v5e performance model for the GPTQ kernel strategies.
+
+This is the quantitative mapping of the paper's ablation onto TPU terms
+(DESIGN.md §2): each strategy changes HBM bytes moved and/or the compute unit,
+and the model charges exactly those differences:
+
+  naive     : + full bf16 W round-trip through HBM (write then re-read)
+  SMB off   : + (K/bk - 1) extra fp32 read+write sweeps of the output block
+              (K-outermost grid revisits the HBM output — the atomicAdd analogue)
+  VML off   : weights cost 2x bytes (int8-expanded instead of packed int32)
+  ILA off   : UNFUSED dequant: an extra VPU pass over the weight tile that
+              cannot overlap the matmul, and the MXU runs at a 2:1 derate
+              (the packed-fp16-FMA vs compiler-scalar ratio on GCN — the
+              paper's v_mad_f16 effect, not a 50x unit swap)
+
+time = max(memory, compute) per kernel invocation (perfect overlap — an upper
+bound both paths share, so *relative* strategy effects are conservative).
+NB: on v5e, decode is HBM-bound, so the memory opts (VML/SMB) dominate where
+the paper's DCU saw ILA dominate — the bottleneck shifts with the hardware;
+EXPERIMENTS.md reports both attributions.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+from repro.core.opt_strategies import KernelStrategy
+
+PEAK_MXU = 197e12
+PEAK_VPU = 3.9e12
+HBM_BW = 819e9
+BK_DEFAULT = 512
+ILA_OFF_MXU_DERATE = 0.5     # packed 2-way fp16 FMA vs scalar sequence (GCN)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCost:
+    hbm_bytes: float
+    mxu_flops: float
+    vpu_flops: float
+
+    @property
+    def time_s(self) -> float:
+        mem = self.hbm_bytes / HBM_BW
+        comp = self.mxu_flops / PEAK_MXU + self.vpu_flops / PEAK_VPU
+        return max(mem, comp)
+
+
+def gptq_matmul_cost(m: int, k: int, n: int, *, group_size: int = 128,
+                     strategy: KernelStrategy, bk: int = BK_DEFAULT,
+                     act_bytes: int = 2) -> KernelCost:
+    g = group_size if group_size > 0 else k
+    w_packed = k * n // 2 + (k // g) * n * 2 + (k // g) * n // 2
+    w_int8 = k * n + (k // g) * n * 2 + (k // g) * n // 2
+    x_bytes = m * k * act_bytes
+    out_once = m * n * act_bytes
+
+    matmul_flops = 2.0 * m * k * n
+    dequant_flops = 2.0 * k * n                  # (q - z) * s on the VPU
+
+    if not strategy.fused:                       # naive two-pass
+        w_bytes = w_packed if strategy.packed_loads else w_int8
+        pass1 = w_bytes + k * n * 2              # read packed, write bf16 W
+        pass2 = k * n * 2 + x_bytes + out_once   # re-read bf16 W
+        return KernelCost(hbm_bytes=pass1 + pass2,
+                          mxu_flops=matmul_flops,
+                          vpu_flops=dequant_flops)
+
+    w_bytes = w_packed if strategy.packed_loads else w_int8
+    hbm = w_bytes + x_bytes
+    if strategy.accum_vmem:
+        hbm += out_once                          # single writeback
+    else:
+        sweeps = max(k // bk, 1)
+        hbm += out_once + 2.0 * m * n * 4 * max(sweeps - 1, 0)
+    if strategy.mxu:
+        # fused: dequant overlaps the MXU pipeline (charged as free)
+        return KernelCost(hbm, matmul_flops, 0.0)
+    # unfused: serial VPU dequant pass + derated MXU
+    return KernelCost(hbm, matmul_flops / ILA_OFF_MXU_DERATE, dequant_flops)
+
+
+# --------------------------------------------------------------- model level
+def _linear_shapes(cfg: ModelConfig) -> list[tuple[int, int]]:
+    """(K, N) of every quantized matmul in one layer."""
+    d, hd = cfg.d_model, cfg.head_dim
+    shapes = [
+        (d, cfg.num_heads * hd), (d, cfg.num_kv_heads * hd),
+        (d, cfg.num_kv_heads * hd), (cfg.num_heads * hd, d),
+    ]
+    if cfg.act == "swiglu":
+        shapes += [(d, cfg.d_ff), (d, cfg.d_ff), (cfg.d_ff, d)]
+    else:
+        shapes += [(d, cfg.d_ff), (cfg.d_ff, d)]
+    return shapes
+
+
+def decode_step_cost(cfg: ModelConfig, batch: int, context: int, *,
+                     strategy: KernelStrategy, group_size: int = 128) -> float:
+    """Seconds per decode step (one token for `batch` sequences)."""
+    t = 0.0
+    for k, n in _linear_shapes(cfg):
+        t += gptq_matmul_cost(batch, k, n, group_size=group_size,
+                              strategy=strategy).time_s
+    t *= cfg.num_layers
+    # attention: read the KV cache (strategy-independent)
+    kv_bytes = (2.0 * cfg.num_layers * batch * context
+                * cfg.num_kv_heads * cfg.head_dim * 2)
+    t += kv_bytes / HBM_BW
+    # output head (fp16, not quantized)
+    head = 2.0 * cfg.d_model * cfg.vocab_size
+    t += max(head / HBM_BW, 2.0 * batch * cfg.d_model * cfg.vocab_size / PEAK_MXU)
+    return t
+
+
+def prefill_cost(cfg: ModelConfig, batch: int, prompt: int, *,
+                 strategy: KernelStrategy, group_size: int = 128) -> float:
+    """Seconds to prefill `prompt` tokens for `batch` sequences."""
+    m = batch * prompt
+    t = 0.0
+    for k, n in _linear_shapes(cfg):
+        t += gptq_matmul_cost(m, k, n, group_size=group_size,
+                              strategy=strategy).time_s
+    t *= cfg.num_layers
+    # attention flops (MXU): 2 * 2 * B * S^2 * H * hd (causal halves it)
+    attn = 2.0 * batch * prompt * prompt * cfg.num_heads * cfg.head_dim
+    t += attn / PEAK_MXU
+    return t
+
+
+def _decode_total(cfg, batch, prompt, output, strategy, group_size) -> float:
+    """Total decode seconds, sampling the growing context at 8 points."""
+    n_samples = min(output, 8)
+    per_sample = output // n_samples
+    total = 0.0
+    for i in range(n_samples):
+        ctx = prompt + i * per_sample
+        total += per_sample * decode_step_cost(
+            cfg, batch, ctx, strategy=strategy, group_size=group_size)
+    return total
+
+
+def request_latency(cfg: ModelConfig, *, strategy: KernelStrategy,
+                    batch: int = 32, prompt: int = 256, output: int = 128,
+                    group_size: int = 128) -> float:
+    """End-to-end seconds for one batch of requests (paper Fig. 3 shape)."""
+    return (prefill_cost(cfg, batch, prompt, strategy=strategy,
+                         group_size=group_size)
+            + _decode_total(cfg, batch, prompt, output, strategy, group_size))
+
+
+def serving_throughput(cfg: ModelConfig, *, strategy: KernelStrategy,
+                       batch: int = 32, prompt: int = 256, output: int = 128,
+                       group_size: int = 128) -> float:
+    """Generated tokens/s for the paper's workload shape (batch of 32
+    prompts, ShareGPT-like lengths) — paper Fig. 2's metric."""
+    total = request_latency(cfg, strategy=strategy, batch=batch,
+                            prompt=prompt, output=output,
+                            group_size=group_size)
+    return batch * output / total

@@ -1,0 +1,69 @@
+"""Deterministic, shardable, resumable synthetic data pipelines.
+
+* ``LMDataPipeline`` — tokenized LM batches (train substrate): deterministic
+  per-step RNG (resume = seek), host-sharded (each data-parallel host draws
+  only its rows), Zipf-ish token marginals so losses are non-degenerate.
+* ``sharegpt_stream`` — ShareGPT-like request stream for throughput benches
+  (the paper's workload): lognormal prompt/output lengths, Poisson arrivals.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class LMDataPipeline:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    host_index: int = 0
+    host_count: int = 1
+
+    def __post_init__(self):
+        assert self.global_batch % self.host_count == 0
+        self.local_batch = self.global_batch // self.host_count
+
+    def batch_at(self, step: int) -> dict:
+        """Deterministic batch for a given step (resume-safe: a restarted job
+        re-requests exactly the batches it would have seen)."""
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + step) * 65_537 + self.host_index)
+        zipf = rng.zipf(1.3, size=(self.local_batch, self.seq_len + 1))
+        tokens = np.minimum(zipf, self.vocab_size - 1).astype(np.int32)
+        return {"tokens": tokens[:, :-1],
+                "labels": tokens[:, 1:].copy()}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+@dataclasses.dataclass
+class SyntheticRequest:
+    arrival_s: float
+    prompt_len: int
+    output_len: int
+    prompt: list[int]
+
+
+def sharegpt_stream(n_requests: int, *, vocab_size: int, seed: int = 0,
+                    mean_prompt: float = 32.0, mean_output: float = 16.0,
+                    qps: float = 8.0, max_prompt: int = 1024) -> list[SyntheticRequest]:
+    """ShareGPT_V3-like synthetic workload: lognormal lengths (heavy tail),
+    Poisson arrivals — the statistics the paper's throughput runs sample."""
+    rng = np.random.default_rng(seed)
+    arr = np.cumsum(rng.exponential(1.0 / qps, size=n_requests))
+    pl = np.clip(rng.lognormal(np.log(mean_prompt), 0.7, n_requests), 1,
+                 max_prompt).astype(int)
+    ol = np.clip(rng.lognormal(np.log(mean_output), 0.6, n_requests), 1,
+                 4 * mean_output).astype(int)
+    return [SyntheticRequest(
+        arrival_s=float(arr[i]), prompt_len=int(pl[i]), output_len=int(ol[i]),
+        prompt=rng.integers(2, vocab_size, size=int(pl[i])).tolist())
+        for i in range(n_requests)]

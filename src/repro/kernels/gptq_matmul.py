@@ -1,0 +1,261 @@
+"""Pallas TPU kernel for fused GPTQ W4A16 matmul — the paper's kernel.
+
+y[M, N] = x[M, K] @ dequant(qweight[K//8, N], scales[G, N], qzeros[G, N//8])
+
+Strategy flags (core/opt_strategies.py) select the paper's ablation variants:
+
+* SMB  (``accum_vmem``): fp32 VMEM scratch accumulator, K-innermost grid,
+  single writeback on the last K step — vs. K-OUTERMOST grid where every K
+  step revisits the HBM-backed output block (read-modify-write), the TPU
+  analogue of the DCU baseline's per-thread global atomicAdd traffic.
+* VML  (``packed_loads``): weights arrive as packed int32 (8 nibbles/word,
+  K/8 rows) and are unpacked with vector shifts in VREGs — vs. a pre-expanded
+  int8 array with 2x the HBM footprint.
+* ILA  (``mxu``): the dequantized (bk, bn) tile feeds the MXU via ``jnp.dot``
+  (f32 accumulation) — vs. a VPU fori-loop of broadcast multiply+add
+  (the compiler-generated-scalar-code analogue).
+
+Tiling: blocks are (8,128)-aligned; defaults bm=128, bn=256, bk=512 give a
+~0.33 MB working set (see DESIGN.md §6).  ``group_size`` must divide or be a
+multiple of bk.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import packing
+from repro.core.opt_strategies import KernelStrategy, OPT4GPTQ
+
+NIB = packing.NIBBLES_PER_WORD
+
+
+def _unpack_rows_block(qw, bk):
+    """(bk//8, bn) int32 -> (bk, bn) f32 nibble values, vector shift/mask."""
+    q = qw.astype(jnp.uint32)
+    shifts = (4 * jnp.arange(NIB, dtype=jnp.uint32))[None, :, None]
+    nib = (q[:, None, :] >> shifts) & jnp.uint32(0xF)
+    return nib.reshape(bk, q.shape[-1]).astype(jnp.float32)
+
+
+def _unpack_cols_block(qz, bn):
+    """(gk, bn//8) int32 -> (gk, bn) f32 zero points."""
+    q = qz.astype(jnp.uint32)
+    shifts = (4 * jnp.arange(NIB, dtype=jnp.uint32))[None, None, :]
+    nib = (q[:, :, None] >> shifts) & jnp.uint32(0xF)
+    return nib.reshape(q.shape[0], bn).astype(jnp.float32)
+
+
+def _dequant_tile(w_nib, s, z, bk, group_size):
+    """(bk, bn) nibbles + (gk, bn) scales/zeros -> (bk, bn) dequantized f32."""
+    gk = s.shape[0]
+    if gk == 1:
+        return (w_nib - z) * s                       # broadcast over rows
+    reps = bk // gk
+    s_rep = jnp.repeat(s, reps, axis=0)
+    z_rep = jnp.repeat(z, reps, axis=0)
+    return (w_nib - z_rep) * s_rep
+
+
+def _compute_tile(x_tile, w_tile, mxu: bool):
+    """x:(bm,bk) f32  w:(bk,bn) f32 -> (bm,bn) f32 partial product."""
+    if mxu:
+        return jnp.dot(x_tile, w_tile, preferred_element_type=jnp.float32)
+    # ILA-off: VPU broadcast multiply + add, one K row per step.
+    bm, bk = x_tile.shape
+    bn = w_tile.shape[1]
+
+    def body(j, acc):
+        xj = jax.lax.dynamic_slice_in_dim(x_tile, j, 1, axis=1)       # (bm, 1)
+        wj = jax.lax.dynamic_slice_in_dim(w_tile, j, 1, axis=0)       # (1, bn)
+        return acc + xj * wj
+
+    return jax.lax.fori_loop(0, bk, body, jnp.zeros((bm, bn), jnp.float32))
+
+
+# --------------------------------------------------------------------- kernels
+def _kernel_vmem(x_ref, qw_ref, s_ref, qz_ref, o_ref, acc_ref, *,
+                 bk, group_size, strategy: KernelStrategy):
+    """K-innermost grid; fp32 VMEM accumulator; single writeback (SMB on)."""
+    knum = pl.num_programs(2)
+    kidx = pl.program_id(2)
+
+    @pl.when(kidx == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if strategy.packed_loads:
+        w_nib = _unpack_rows_block(qw_ref[...], bk)
+    else:
+        w_nib = qw_ref[...].astype(jnp.float32)
+    z = _unpack_cols_block(qz_ref[...], s_ref.shape[1])
+    w = _dequant_tile(w_nib, s_ref[...].astype(jnp.float32), z, bk, group_size)
+    acc_ref[...] += _compute_tile(x_ref[...].astype(jnp.float32), w, strategy.mxu)
+
+    @pl.when(kidx == knum - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _kernel_hbm(x_ref, qw_ref, s_ref, qz_ref, o_ref, *,
+                bk, group_size, strategy: KernelStrategy):
+    """K-OUTERMOST grid; output block revisited (evict+reload through HBM each
+    K sweep) — the global-memory atomic-accumulation analogue (SMB off)."""
+    kidx = pl.program_id(0)
+
+    @pl.when(kidx == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    if strategy.packed_loads:
+        w_nib = _unpack_rows_block(qw_ref[...], bk)
+    else:
+        w_nib = qw_ref[...].astype(jnp.float32)
+    z = _unpack_cols_block(qz_ref[...], s_ref.shape[1])
+    w = _dequant_tile(w_nib, s_ref[...].astype(jnp.float32), z, bk, group_size)
+    part = _compute_tile(x_ref[...].astype(jnp.float32), w, strategy.mxu)
+    o_ref[...] += part.astype(o_ref.dtype)
+
+
+def _kernel_dequant(qw_ref, s_ref, qz_ref, w_ref, *, bk, group_size, packed):
+    """Pass 1 of the 'naive' strategy: materialize bf16 weights to HBM."""
+    if packed:
+        w_nib = _unpack_rows_block(qw_ref[...], bk)
+    else:
+        w_nib = qw_ref[...].astype(jnp.float32)
+    z = _unpack_cols_block(qz_ref[...], s_ref.shape[1])
+    w = _dequant_tile(w_nib, s_ref[...].astype(jnp.float32), z, bk, group_size)
+    w_ref[...] = w.astype(w_ref.dtype)
+
+
+def _kernel_matmul(x_ref, w_ref, o_ref, acc_ref):
+    """Pass 2 of the 'naive' strategy: plain bf16 matmul (re-reads W from HBM)."""
+    kidx = pl.program_id(2)
+
+    @pl.when(kidx == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32),
+                            w_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(kidx == pl.num_programs(2) - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+# ------------------------------------------------------------------ dispatcher
+def _scale_block(bk, group_size):
+    """Rows of the scales/zeros block covering bk K-rows."""
+    return max(bk // group_size, 1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group_size", "strategy", "bm", "bn", "bk", "out_dtype",
+                     "interpret"))
+def gptq_matmul(x: jnp.ndarray, qweight: jnp.ndarray, scales: jnp.ndarray,
+                qzeros: jnp.ndarray, *, group_size: int,
+                strategy: KernelStrategy = OPT4GPTQ,
+                bm: int = 128, bn: int = 256, bk: int = 512,
+                out_dtype=None, interpret: bool = True) -> jnp.ndarray:
+    """Fused GPTQ matmul. x: (M, K). qweight: (K//8, N) int32 when
+    ``strategy.packed_loads`` else (K, N) int8 (pre-expanded). Caller applies
+    the act-order permutation to x (see ops.gptq_linear)."""
+    m, k = x.shape
+    n = scales.shape[1]
+    g = group_size if group_size > 0 else k
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, n)
+    bk = min(bk, k)
+    if bk % g != 0 and g % bk != 0:
+        bk = g  # fall back: align block to the quantization group
+    assert k % bk == 0 and n % bn == 0, (m, k, n, bm, bn, bk)
+    gk = _scale_block(bk, g)
+
+    m_pad = _round_up(m, bm)
+    if m_pad != m:
+        x = jnp.pad(x, ((0, m_pad - m), (0, 0)))
+    nm, nn, nk = m_pad // bm, n // bn, k // bk
+    out_dtype = out_dtype or x.dtype
+    out_shape = jax.ShapeDtypeStruct((m_pad, n), out_dtype)
+
+    if strategy.packed_loads:
+        qw_spec_inner = pl.BlockSpec((bk // NIB, bn), lambda mi, ni, ki: (ki, ni))
+        qw_spec_outer = pl.BlockSpec((bk // NIB, bn), lambda ki, mi, ni: (ki, ni))
+    else:
+        qw_spec_inner = pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni))
+        qw_spec_outer = pl.BlockSpec((bk, bn), lambda ki, mi, ni: (ki, ni))
+
+    if not strategy.fused:
+        # naive two-pass: dequant whole W to HBM, then matmul re-reads it.
+        w_bf16 = pl.pallas_call(
+            functools.partial(_kernel_dequant, bk=bk, group_size=g,
+                              packed=strategy.packed_loads),
+            grid=(nk, nn),
+            in_specs=[
+                pl.BlockSpec((bk // NIB, bn) if strategy.packed_loads else (bk, bn),
+                             lambda ki, ni: (ki, ni)),
+                pl.BlockSpec((gk, bn), lambda ki, ni: (ki * bk // g, ni)),
+                pl.BlockSpec((gk, bn // NIB), lambda ki, ni: (ki * bk // g, ni)),
+            ],
+            out_specs=pl.BlockSpec((bk, bn), lambda ki, ni: (ki, ni)),
+            out_shape=jax.ShapeDtypeStruct((k, n), jnp.bfloat16),
+            interpret=interpret,
+        )(qweight, scales, qzeros)
+        y = pl.pallas_call(
+            _kernel_matmul,
+            grid=(nm, nn, nk),
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+                pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+            out_shape=out_shape,
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            interpret=interpret,
+        )(x, w_bf16)
+        return y[:m]
+
+    if strategy.accum_vmem:
+        y = pl.pallas_call(
+            functools.partial(_kernel_vmem, bk=bk, group_size=g,
+                              strategy=strategy),
+            grid=(nm, nn, nk),                      # K innermost
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+                qw_spec_inner,
+                pl.BlockSpec((gk, bn), lambda mi, ni, ki: (ki * bk // g, ni)),
+                pl.BlockSpec((gk, bn // NIB), lambda mi, ni, ki: (ki * bk // g, ni)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+            out_shape=out_shape,
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            interpret=interpret,
+        )(x, qweight, scales, qzeros)
+    else:
+        y = pl.pallas_call(
+            functools.partial(_kernel_hbm, bk=bk, group_size=g,
+                              strategy=strategy),
+            grid=(nk, nm, nn),                      # K OUTERMOST: HBM revisits
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda ki, mi, ni: (mi, ki)),
+                qw_spec_outer,
+                pl.BlockSpec((gk, bn), lambda ki, mi, ni: (ki * bk // g, ni)),
+                pl.BlockSpec((gk, bn // NIB), lambda ki, mi, ni: (ki * bk // g, ni)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda ki, mi, ni: (mi, ni)),
+            out_shape=jax.ShapeDtypeStruct((m_pad, n), jnp.float32),
+            interpret=interpret,
+        )(x, qweight, scales, qzeros)
+        y = y.astype(out_dtype)
+    return y[:m]
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult

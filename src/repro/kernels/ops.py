@@ -1,0 +1,44 @@
+"""Public jit'd wrappers dispatching Pallas kernels vs pure-jnp references.
+
+``use_pallas=False`` (default on this CPU container / for the dry-run) routes
+to the ref oracle — identical math and HBM traffic; ``use_pallas=True``
+invokes the Pallas kernel (interpret mode on CPU, compiled on real TPU).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.gptq import QuantizedLinear
+from repro.core.opt_strategies import KernelStrategy, OPT4GPTQ
+from repro.kernels import gptq_matmul as _gm
+from repro.kernels import ref as _ref
+
+
+def gptq_linear(ql: QuantizedLinear, x: jnp.ndarray, *,
+                strategy: KernelStrategy = OPT4GPTQ,
+                use_pallas: bool = False, interpret: bool = True,
+                block_sizes: tuple[int, int, int] | None = None) -> jnp.ndarray:
+    """y = x @ dequant(W) + bias  for x of shape (..., K)."""
+    k, n = ql.shape
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, k)
+    if ql.perm is not None:
+        x2 = jnp.take(x2, ql.perm, axis=-1)         # exllama-style b_q_perm
+
+    if use_pallas:
+        qw = (ql.qweight if strategy.packed_loads
+              else packing.unpack_int4_rows(ql.qweight, k))   # VML-off: int8 2x
+        kwargs = {}
+        if block_sizes is not None:
+            kwargs = dict(zip(("bm", "bn", "bk"), block_sizes))
+        y = _gm.gptq_matmul(x2, qw, ql.scales, ql.qzeros,
+                            group_size=ql.group_size, strategy=strategy,
+                            out_dtype=x.dtype, interpret=interpret, **kwargs)
+    else:
+        y = _ref.gptq_matmul_ref(x2, ql.qweight, ql.scales, ql.qzeros,
+                                 group_size=ql.group_size, perm=None,
+                                 out_dtype=x.dtype)
+    if ql.bias is not None:
+        y = y + ql.bias.astype(y.dtype)
+    return y.reshape(*lead, n)

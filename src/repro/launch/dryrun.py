@@ -1,0 +1,268 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) cell
+on the production meshes (16x16 single-pod / 2x16x16 multi-pod) and record
+memory + roofline terms.  ShapeDtypeStruct stand-ins only — no allocation.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+
+Results are cached to experiments/dryrun/<cell>.json; the EXPERIMENTS.md
+tables are generated from these files (perf/report.py).
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, applicable, get_config, input_specs
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.gptq import GPTQConfig
+from repro.core.quantize_model import abstract_quantized_params
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models import layers as L
+from repro.perf import roofline as R
+from repro.sharding import partition as SP
+from repro.training import optimizer as O
+from repro.training.train_loop import TrainState, make_train_step
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _shape_of(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               opt_state_dtype: str = "float32", remat: str | None = None,
+               extra_cfg: dict | None = None):
+    """Returns (fn, abstract_args, in_shardings, out_shardings, n_active)."""
+    if remat is not None:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if extra_cfg:
+        cfg = dataclasses.replace(cfg, **extra_cfg)
+    model = build_model(cfg)
+    batch_abs = input_specs(cfg, shape)
+    batch_shard = SP.batch_specs(batch_abs, cfg, mesh)
+
+    if shape.kind == "train":
+        params_abs = model.abstract_params()
+        p_shard = SP.param_shardings(params_abs, cfg, mesh)
+        opt_cfg = O.OptimizerConfig(state_dtype=opt_state_dtype)
+        opt_abs = jax.eval_shape(lambda p: O.init_opt_state(p, opt_cfg), params_abs)
+        opt_shard = SP.opt_state_shardings(opt_abs, p_shard, mesh)
+        rng_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        state_abs = TrainState(params=params_abs, opt_state=opt_abs, rng=rng_abs)
+        state_shard = TrainState(params=p_shard, opt_state=opt_shard,
+                                 rng=SP.replicated(mesh))
+        step = make_train_step(model, opt_cfg)
+        repl = SP.replicated(mesh)
+        metr_shard = {"loss": repl, "aux": repl, "grad_norm": repl, "lr": repl}
+        # MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE)
+        return (step, (state_abs, batch_abs), (state_shard, batch_shard),
+                (state_shard, metr_shard), cfg.active_param_count())
+
+    # inference shapes: GPTQ-int4 weights (the paper's setting)
+    params_abs = abstract_quantized_params(model.abstract_params(),
+                                           GPTQConfig(group_size=128))
+    p_shard = SP.param_shardings(params_abs, cfg, mesh)
+    b = shape.global_batch
+    repl = SP.replicated(mesh)
+
+    logits_spec = SP.sanitize_spec(P(None, "model"), (b, cfg.vocab_size), mesh)
+
+    if shape.kind == "prefill":
+        cache_abs = jax.eval_shape(
+            lambda: model.init_cache(b, shape.seq_len, dtype=jnp.bfloat16))
+        c_shard = SP.cache_specs(cache_abs, cfg, mesh)
+        lens_abs = jax.ShapeDtypeStruct((b,), jnp.int32)
+        lens_shard = SP.batch_specs({"x": lens_abs}, cfg, mesh)["x"]
+        logits_shard = NamedSharding(mesh, logits_spec)
+
+        def prefill_step(params, batch, cache, seq_lens):
+            return model.prefill(params, batch, cache, seq_lens)
+
+        return (prefill_step, (params_abs, batch_abs, cache_abs, lens_abs),
+                (p_shard, batch_shard, c_shard, lens_shard),
+                (logits_shard, c_shard, lens_shard),
+                cfg.active_param_count())
+
+    # decode: one token against a cache filled to ~seq_len
+    cache_abs = jax.eval_shape(
+        lambda: model.init_cache(b, shape.seq_len, dtype=jnp.bfloat16))
+    c_shard = SP.cache_specs(cache_abs, cfg, mesh)
+    lens_abs = jax.ShapeDtypeStruct((b,), jnp.int32)
+    lens_shard = SP.batch_specs({"x": lens_abs}, cfg, mesh)["x"]
+    logits_shard = NamedSharding(mesh, logits_spec)
+    tokens_abs = batch_abs["tokens"]
+    extra_keys = {k: v for k, v in batch_abs.items() if k != "tokens"}
+
+    def decode(params, tokens, cache, seq_lens, extra):
+        return model.decode_step(params, tokens, cache, seq_lens, extra=extra)
+
+    extra_shard = SP.batch_specs(extra_keys, cfg, mesh)
+    return (decode,
+            (params_abs, tokens_abs, cache_abs, lens_abs, extra_keys),
+            (p_shard, batch_shard["tokens"], c_shard, lens_shard, extra_shard),
+            (logits_shard, c_shard, lens_shard),
+            cfg.active_param_count())
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             opt_state_dtype: str | None = None, remat: str | None = None,
+             extra_cfg: dict | None = None, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    cell = f"{arch}__{shape_name}__{'multipod' if multi_pod else 'singlepod'}{tag}"
+    if not ok:
+        return {"cell": cell, "status": "skipped", "reason": why}
+
+    # default memory-fit policies (recorded in EXPERIMENTS.md)
+    if opt_state_dtype is None:
+        opt_state_dtype = "bfloat16" if cfg.param_count() > 2e11 else "float32"
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    t0 = time.time()
+    # constrain activations: (B,S,D) carries batch-sharded AND sequence-
+    # sharded over the model axis (Megatron-style sequence parallelism — the
+    # remat-saved residual stack is L x B x S x D and must not replicate over
+    # 'model'); attention q/k/v + logits shard over heads (padded if needed)
+    r = SP.rules_for_mesh(mesh)
+    bax = SP._bax_for(mesh, r, shape.global_batch)
+    bspec = bax or None
+    seq_spec = r.tp if (shape.kind != "decode"
+                        and shape.seq_len % mesh.shape[r.tp] == 0) else None
+    if shape.kind == "decode" and not cfg.is_encoder:
+        # align attention compute with the KV cache layout: when kv_heads
+        # doesn't divide 'model' the cache shards head_dim; constraining to
+        # head sharding would reshard (all-gather) the whole cache per step.
+        # With hd sharded, QK^T partial-sums all-reduce only the (tiny) logits.
+        tpsz = mesh.shape[r.tp]
+        if cfg.num_kv_heads and cfg.num_kv_heads % tpsz != 0 \
+                and cfg.head_dim % tpsz == 0:
+            heads_spec = P(bspec, None, None, r.tp)
+            logits_spec = None
+        else:
+            heads_spec = P(bspec, None, r.tp, None)
+            logits_spec = P(bspec, r.tp, None, None)
+    else:
+        heads_spec = P(bspec, None, r.tp, None)
+        logits_spec = P(bspec, r.tp, None, None)
+    # MoE (G, E, C, d) buffers: grouped dispatch shards the group dim over
+    # data (scatter stays shard-local); global dispatch shards capacity
+    moe_groups = (extra_cfg or {}).get("moe_dispatch_groups",
+                                       cfg.moe_dispatch_groups)
+    moe_spec = (P(bspec, r.tp, None, None) if moe_groups > 1
+                else P(None, r.tp, bspec, None))
+    L.set_act_sharding(P(bspec, seq_spec, None),
+                       heads_spec=heads_spec,
+                       logits_spec=logits_spec,
+                       moe_spec=moe_spec)
+    L.set_moe_ep(mesh, "data", r.tp, bspec)
+    try:
+        fn, args, in_sh, out_sh, n_active = build_cell(
+            cfg, shape, mesh, opt_state_dtype=opt_state_dtype, remat=remat,
+            extra_cfg=extra_cfg)
+        donate = (0,) if shape.kind == "train" else (2,)   # state / cache
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                              donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    finally:
+        L.set_act_sharding(None)
+        L.set_moe_ep(None, "", "", None)
+
+    mf = R.model_flops(cfg, shape, n_active)
+    roof = R.analyze(compiled, n_devices=n_dev, model_flops_global=mf)
+    ma = compiled.memory_analysis()
+
+    # analytic per-device memory (exact sharded state + activation model);
+    # the raw CPU memory_analysis is kept for reference but inflates bf16
+    # loop state ~3x (float-normalization-bf16 — see perf/memory_model.py)
+    from repro.perf import memory_model as MM
+    if shape.kind == "train":
+        mem_est = MM.estimate(cfg, shape, mesh, state_abs=args[0],
+                              state_shardings=in_sh[0],
+                              seq_sharded=True)
+    else:
+        mem_est = MM.estimate(cfg, shape, mesh, state_abs=args[0],
+                              state_shardings=in_sh[0], cache_abs=args[2],
+                              cache_shardings=in_sh[2], seq_sharded=True)
+
+    rec = {
+        "cell": cell, "status": "ok", "arch": arch, "shape": shape_name,
+        "multi_pod": multi_pod, "n_devices": n_dev,
+        "opt_state_dtype": opt_state_dtype if shape.kind == "train" else None,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem_est.to_dict(),
+        "memory_xla_cpu": {
+            "argument_gb": ma.argument_size_in_bytes / 1e9,
+            "output_gb": ma.output_size_in_bytes / 1e9,
+            "temp_gb": ma.temp_size_in_bytes / 1e9,
+            "alias_gb": ma.alias_size_in_bytes / 1e9,
+        },
+        "roofline": roof.to_dict(),
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--remat")
+    args = ap.parse_args()
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    from repro.configs import ARCH_IDS
+    cells = []
+    archs = ARCH_IDS if args.all else [args.arch]
+    shapes = list(SHAPES) if args.all else ([args.shape] if args.shape else list(SHAPES))
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    n_ok = n_skip = n_fail = 0
+    for a, s, mp in cells:
+        name = f"{a}__{s}__{'multipod' if mp else 'singlepod'}"
+        out = RESULTS_DIR / f"{name}.json"
+        if out.exists() and not args.force:
+            print(f"[cached] {name}")
+            continue
+        try:
+            rec = run_cell(a, s, multi_pod=mp, remat=args.remat)
+        except Exception as e:  # a failing cell is a bug — record it loudly
+            rec = {"cell": name, "status": "failed", "error": repr(e),
+                   "traceback": traceback.format_exc()[-4000:]}
+        out.write_text(json.dumps(rec, indent=2))
+        st = rec["status"]
+        n_ok += st == "ok"; n_skip += st == "skipped"; n_fail += st == "failed"
+        extra = (f" mem={rec['memory']['total_gb']:.2f}GB"
+                 f" fits={rec['memory']['fits_16gb']}"
+                 f" dom={rec['roofline']['dominant']}" if st == "ok"
+                 else rec.get("reason", rec.get("error", ""))[:100])
+        print(f"[{st}] {name} {extra}", flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} failed={n_fail}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb runner: compile a cell with a named variant (extra config /
+remat / dispatch policy), record its roofline next to the baseline.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb <arch> <shape> <tag> \
+      [--extra '{"moe_dispatch_groups": 16}'] [--remat dots] [--multi-pod]
+
+Results land in experiments/hillclimb/<cell>__<tag>.json; EXPERIMENTS.md §Perf
+is written from these.
+"""
+import argparse
+import json
+import pathlib
+
+from repro.launch.dryrun import run_cell
+
+OUT = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "hillclimb"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("tag")
+    ap.add_argument("--extra", default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--opt-dtype", default=None)
+    args = ap.parse_args()
+    extra = json.loads(args.extra) if args.extra else None
+    OUT.mkdir(parents=True, exist_ok=True)
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   opt_state_dtype=args.opt_dtype, remat=args.remat,
+                   extra_cfg=extra, tag=f"__{args.tag}")
+    rec["variant"] = {"tag": args.tag, "extra": extra, "remat": args.remat}
+    out = OUT / f"{args.arch}__{args.shape}__{args.tag}.json"
+    out.write_text(json.dumps(rec, indent=2))
+    if rec["status"] == "ok":
+        ro = rec["roofline"]
+        print(f"[{args.tag}] comp={ro['compute_s']:.3f}s mem={ro['memory_s']:.3f}s "
+              f"coll={ro['collective_s']:.3f}s dom={ro['dominant']} "
+              f"ratio={ro['useful_ratio']:.3f} mem_gb={rec['memory']['total_gb']:.2f}")
+        print("collectives:", {k: f"{v['bytes'] / 1e9:.1f}GB"
+                               for k, v in ro["collectives"].items()})
+    else:
+        print(rec["status"], rec.get("error", "")[:300])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Serving driver: GPTQ-quantize a model and run a request stream through the
+continuous-batching engine with a chosen kernel strategy.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3_4b --smoke \
+      --requests 8 --strategy opt4gptq [--no-pallas]
+"""
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_4b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--strategy", default="opt4gptq")
+    ap.add_argument("--no-pallas", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, smoke_config
+    from repro.core.gptq import GPTQConfig
+    from repro.core.opt_strategies import get_strategy
+    from repro.core.quantize_model import quantize_params
+    from repro.data.pipeline import sharegpt_stream
+    from repro.models import build_model, layers as L
+    from repro.serving.engine import Engine
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    qparams = quantize_params(params, None, GPTQConfig(group_size=32))
+    kern = L.KernelConfig(strategy=get_strategy(args.strategy),
+                          use_pallas=not args.no_pallas,
+                          block_sizes=(8, 64, 64))
+    eng = Engine(model, qparams, batch_slots=args.slots,
+                 max_len=args.max_len, kernels=kern, eos_id=-1)
+    stream = sharegpt_stream(args.requests, vocab_size=cfg.vocab_size,
+                             seed=0, mean_prompt=10, mean_output=args.max_new,
+                             max_prompt=args.max_len // 2)
+    t0 = time.time()
+    for r in stream:
+        eng.submit(r.prompt, max_new_tokens=min(r.output_len, args.max_new))
+    done = eng.run()
+    dt = time.time() - t0
+    toks = sum(len(f.output) for f in done)
+    lat = sorted(f.latency for f in done)
+    print(f"[serve] {cfg.name} x {args.strategy}: {len(done)} reqs, "
+          f"{toks} tokens, {toks / dt:.2f} tok/s (interpret), "
+          f"p50 {lat[len(lat) // 2]:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,300 @@
+"""Attention variants: GQA (bias / qk-norm / sliding-window / M-RoPE) and
+DeepSeek-style MLA (compressed KV cache, absorbed decode path).
+
+All paths funnel into one primitive, ``attend``: grouped-GQA einsums (no
+head-repetition materialization) with a position-based mask and **query
+chunking** (`lax.map` + checkpoint) so (B, H, Sq, Sk) logits never exceed a
+chunk — the jnp analogue of flash attention, mandatory for 32k prefill /
+train_4k backward memory.
+
+Cache layouts (slot-based contiguous — TPU-idiomatic, see DESIGN.md §2):
+  full attention : k/v (B, max_len, Hkv, D); write at seq_lens via scatter
+  sliding window : ring buffers (B, window + num_sink, Hkv, D); the first
+                   num_sink slots pin attention sinks (hymba meta tokens)
+  MLA            : compressed (B, max_len, kv_lora + rope_dim)
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Q_CHUNK = 2048          # max query rows per logits block
+NEG_INF = -1e30
+
+
+def _mask(qpos, kpos, valid, *, causal: bool, window: int, num_sink: int):
+    """qpos: (B, Sq); kpos: (B, Sk) absolute key positions; valid: (B, Sk) or
+    None. Returns (B, Sq, Sk) boolean."""
+    qp = qpos[:, :, None]
+    kp = kpos[:, None, :]
+    m = jnp.ones(qp.shape[:2] + (kpos.shape[1],), bool)
+    if causal:
+        m &= kp <= qp
+    if window:
+        m &= (kp > qp - window) | (kp < num_sink)
+    if valid is not None:
+        m &= valid[:, None, :]
+    return m
+
+
+def _attend_block(q, k, v, qpos, kpos, valid, *, causal, window, num_sink,
+                  scale, grouped: bool = False):
+    """q: (B, Sq, H, D); k, v: (B, Sk, Hkv, Dk/Dv).
+
+    Train/prefill (``grouped=False``): K/V repeated to H heads so logits shard
+    over the (padded) head axis — see layers.set_act_sharding.
+    Decode (``grouped=True``): grouped-GQA einsum keeps the K/V cache in its
+    native layout — no repeat, no cache resharding (§Perf cell B iteration 4).
+    All einsums take bf16 operands with f32 accumulation — an f32 copy of the
+    (large) K/V cache is never materialized (§Perf cell B iteration 2)."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    m = _mask(qpos, kpos, valid, causal=causal, window=window,
+              num_sink=num_sink)
+    if grouped and rep > 1:
+        qg = q.reshape(b, sq, hkv, rep, d)
+        logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
+                            preferred_element_type=jnp.float32) * scale
+        logits = jnp.where(m[:, None, None], logits, NEG_INF)
+        p = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+    if rep > 1:
+        k = L.constrain_heads(jnp.repeat(k, rep, axis=2))
+        v = L.constrain_heads(jnp.repeat(v, rep, axis=2))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = L.constrain_logits(logits)
+    logits = jnp.where(m[:, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def attend(q, k, v, *, qpos, kpos=None, valid=None, causal=True, window=0,
+           num_sink=0, scale=None, chunk=Q_CHUNK, grouped=False):
+    """Unified masked attention with query chunking.
+
+    q (B,Sq,H,D); k,v (B,Sk,Hkv,·); qpos (B,Sq) absolute query positions;
+    kpos (B,Sk) absolute key positions (default arange); valid (B,Sk) marks
+    live cache slots."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    if kpos is None:
+        kpos = jnp.broadcast_to(jnp.arange(sk, dtype=jnp.int32)[None], (b, sk))
+    fn = functools.partial(_attend_block, causal=causal, window=window,
+                           num_sink=num_sink, scale=scale, grouped=grouped)
+    if sq <= chunk or sq % chunk != 0:
+        return fn(q, k, v, qpos, kpos, valid)
+    nc = sq // chunk
+    qs = jnp.moveaxis(q.reshape(b, nc, chunk, h, d), 1, 0)
+    ps = jnp.moveaxis(qpos.reshape(b, nc, chunk), 1, 0)
+
+    def one(args):
+        qc, pc = args
+        return fn(qc, k, v, pc, kpos, valid)
+
+    outs = jax.lax.map(jax.checkpoint(one), (qs, ps))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, v.shape[-1])
+
+
+# ------------------------------------------------------------------------- GQA
+def gqa_init(rng, cfg: ModelConfig, dtype=jnp.float32):
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": L.linear_init(ks[0], d, cfg.num_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": L.linear_init(ks[1], d, cfg.num_kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": L.linear_init(ks[2], d, cfg.num_kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": L.linear_init(ks[3], cfg.num_heads * hd, d, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def gqa_apply(p, x, *, cfg: ModelConfig, kernels=L.DEFAULT_KERNELS,
+              positions=None, cache=None, seq_lens=None, window: int = 0,
+              causal: bool = True, num_sink: int = 0):
+    """Returns (out, new_cache)."""
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    q = L.linear(p["wq"], x, name="wq", kernels=kernels).reshape(b, s, cfg.num_heads, hd)
+    k = L.linear(p["wk"], x, name="wk", kernels=kernels).reshape(b, s, cfg.num_kv_heads, hd)
+    v = L.linear(p["wv"], x, name="wv", kernels=kernels).reshape(b, s, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = L.rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+        k = L.rms_head_norm(p["k_norm"], k, cfg.norm_eps)
+    if positions is None:
+        positions = jnp.arange(s)[None, :].astype(jnp.int32) + jnp.zeros((b, 1), jnp.int32)
+    q = L.constrain_heads(L.apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections))
+    k = L.apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+
+    chunk = cfg.attn_q_chunk
+    if cache is None:
+        qpos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        out = attend(q, k, v, qpos=qpos, causal=causal and not cfg.is_encoder,
+                     window=window, num_sink=num_sink, chunk=chunk)
+        new_cache = None
+    else:
+        kc, vc = cache["k"], cache["v"]
+        cap = kc.shape[1]
+        is_ring = bool(window) and cap == window + num_sink
+        bidx = jnp.arange(b)[:, None]
+        tpos = seq_lens[:, None] + jnp.arange(s)[None, :]          # (B, S) abs
+        if is_ring:
+            # attend over [old ring ; fresh block] jointly, THEN commit — a
+            # write-first ring would let late block tokens overwrite early
+            # tokens' window during chunked prefill.
+            rw = cap - num_sink
+            j = jnp.arange(cap)[None, :]
+            jr = j - num_sink
+            rlen_old = (seq_lens - num_sink)[:, None]
+            p_ring = ((rlen_old - 1 - jr) // rw) * rw + jr + num_sink
+            kpos_c = jnp.where(j < num_sink, j, p_ring)            # (B, cap)
+            valid_c = jnp.where(j < num_sink, j < seq_lens[:, None],
+                                (p_ring >= num_sink) & (p_ring < seq_lens[:, None]))
+            k_all = jnp.concatenate([kc.astype(k.dtype), k], axis=1)
+            v_all = jnp.concatenate([vc.astype(v.dtype), v], axis=1)
+            kpos = jnp.concatenate([kpos_c, tpos], axis=1)
+            valid = jnp.concatenate([valid_c, jnp.ones(tpos.shape, bool)], axis=1)
+            out = attend(q, k_all, v_all, qpos=tpos, kpos=kpos, valid=valid,
+                         causal=True, window=window, num_sink=num_sink,
+                         chunk=chunk)
+            slot = jnp.where(tpos < num_sink, tpos,
+                             num_sink + (tpos - num_sink) % rw)
+            kc = kc.at[bidx, slot].set(k.astype(kc.dtype))
+            vc = vc.at[bidx, slot].set(v.astype(vc.dtype))
+        else:
+            slot = jnp.minimum(tpos, cap - 1)
+            kc = kc.at[bidx, slot].set(k.astype(kc.dtype))
+            vc = vc.at[bidx, slot].set(v.astype(vc.dtype))
+            out = attend(q, kc, vc, qpos=tpos, causal=True, window=window,
+                         num_sink=num_sink, chunk=chunk, grouped=s <= 8)
+        new_cache = {"k": kc, "v": vc}
+    out = out.reshape(b, s, cfg.num_heads * hd)
+    return L.linear(p["wo"], out, name="wo", kernels=kernels), new_cache
+
+
+# ------------------------------------------------------------------------- MLA
+def mla_init(rng, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    h = cfg.num_heads
+    qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": L.linear_init(ks[0], d, h * qk, dtype=dtype),
+        "wkv_a": L.linear_init(ks[1], d, cfg.kv_lora_rank + cfg.qk_rope_head_dim,
+                               dtype=dtype),
+        "kv_norm": L.norm_init(cfg.kv_lora_rank, "rmsnorm", dtype),
+        "wkv_b": L.linear_init(ks[2], cfg.kv_lora_rank,
+                               h * (cfg.qk_nope_head_dim + cfg.v_head_dim), dtype=dtype),
+        "wo": L.linear_init(ks[3], h * cfg.v_head_dim, d, dtype=dtype),
+    }
+
+
+def _mla_expand(p, c_kv, cfg, kernels, b, n, h):
+    """Expand compressed kv: (B, N, dc) -> k_nope (B,N,H,dn), v (B,N,H,dv)."""
+    dn, dv = cfg.qk_nope_head_dim, cfg.v_head_dim
+    kv = L.linear(p["wkv_b"], c_kv, name="wkv_b", kernels=kernels)
+    kv = kv.reshape(b, n, h, dn + dv)
+    return kv[..., :dn], kv[..., dn:]
+
+
+def mla_apply(p, x, *, cfg: ModelConfig, kernels=L.DEFAULT_KERNELS,
+              positions=None, cache=None, seq_lens=None):
+    b, s, d = x.shape
+    h = cfg.num_heads
+    dn, dr, dv, dc = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                      cfg.v_head_dim, cfg.kv_lora_rank)
+    if positions is None:
+        positions = jnp.arange(s)[None, :].astype(jnp.int32) + jnp.zeros((b, 1), jnp.int32)
+
+    q = L.linear(p["wq"], x, name="wq", kernels=kernels).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = L.linear(p["wkv_a"], x, name="wkv_a", kernels=kernels)
+    c_kv, k_rope = kv_a[..., :dc], kv_a[..., dc:]
+    c_kv = L.apply_norm(p["kv_norm"], c_kv, norm_type="rmsnorm", eps=cfg.norm_eps)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,dr)
+
+    scale = 1.0 / math.sqrt(dn + dr)
+    if cache is None:
+        # train / one-shot prefill: expanded attention over the block
+        k_nope, v = _mla_expand(p, c_kv, cfg, kernels, b, s, h)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], -1)
+        qq = jnp.concatenate([q_nope, q_rope], -1)
+        qpos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        out = attend(qq, k, v, qpos=qpos, causal=True, scale=scale,
+                     chunk=cfg.attn_q_chunk)
+        new_cache = None
+    else:
+        cc = cache["c"]
+        cap = cc.shape[1]
+        bidx = jnp.arange(b)[:, None]
+        tpos = seq_lens[:, None] + jnp.arange(s)[None, :]
+        new_c = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], -1)    # (B,S,dc+dr)
+        cc = cc.at[bidx, jnp.minimum(tpos, cap - 1)].set(new_c.astype(cc.dtype))
+        if s > 1:
+            # prefill with cache: expand the (updated) compressed cache and run
+            # chunked expanded attention (absorbed is decode-only)
+            cached_c = cc[..., :dc].astype(x.dtype)
+            cached_r = cc[..., dc:].astype(x.dtype)
+            k_nope, v = _mla_expand(p, cached_c, cfg, kernels, b, cap, h)
+            k = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(cached_r[:, :, None, :], (b, cap, h, dr))], -1)
+            qq = jnp.concatenate([q_nope, q_rope], -1)
+            out = attend(qq, k, v, qpos=tpos, causal=True, scale=scale,
+                         chunk=cfg.attn_q_chunk)
+        else:
+            # decode: absorbed path — attend in compressed space (MLA's point:
+            # the cache stores dc+dr per token instead of 2*H*D)
+            from repro.core.gptq import QuantizedLinear, dequantize
+            wb = p["wkv_b"]["w"]
+            if isinstance(wb, QuantizedLinear):
+                wb = dequantize(wb, x.dtype)
+            wb = wb.reshape(dc, h, dn + dv)
+            wb_k, wb_v = wb[..., :dn], wb[..., dn:]
+            q_c = jnp.einsum("bshn,chn->bshc", q_nope, wb_k,
+                             preferred_element_type=jnp.float32).astype(x.dtype)
+            cached_c, cached_r = cc[..., :dc], cc[..., dc:]
+            logits = (jnp.einsum("bshc,blc->bhsl", q_c, cached_c,
+                                 preferred_element_type=jnp.float32)
+                      + jnp.einsum("bshr,blr->bhsl", q_rope, cached_r,
+                                   preferred_element_type=jnp.float32)) * scale
+            kpos = jnp.arange(cap)[None, None, None, :]
+            mask = kpos <= tpos[:, None, :, None]
+            logits = jnp.where(mask, logits, NEG_INF)
+            pr = jax.nn.softmax(logits, axis=-1)
+            o_c = jnp.einsum("bhsl,blc->bshc", pr.astype(cc.dtype), cached_c,
+                             preferred_element_type=jnp.float32).astype(x.dtype)
+            out = jnp.einsum("bshc,chv->bshv", o_c, wb_v,
+                             preferred_element_type=jnp.float32).astype(x.dtype)
+        new_cache = {"c": cc}
+    out = out.reshape(b, s, h * dv)
+    return L.linear(p["wo"], out, name="wo", kernels=kernels), new_cache
+
+
+# ----------------------------------------------------------------- cache inits
+def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                   window: int = 0, num_sink: int = 0, dtype=jnp.bfloat16):
+    cap = min(max_len, window + num_sink) if window else max_len
+    shape = (batch, cap, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return {"c": jnp.zeros((batch, max_len,
+                            cfg.kv_lora_rank + cfg.qk_rope_head_dim), dtype)}

@@ -1,0 +1,238 @@
+"""Feed-forward variants: SwiGLU, squared-ReLU (Nemotron), and MoE with
+sort-based capacity-padded dispatch (TPU-idiomatic EP; active-FLOPs-exact for
+the roofline — no dense all-experts compute, no O(T^2) one-hot einsum)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------- dense
+def ffn_init(rng, cfg: ModelConfig, d_ff: int | None = None, dtype=jnp.float32):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": L.linear_init(ks[0], cfg.d_model, d_ff, dtype=dtype),
+            "w_up": L.linear_init(ks[1], cfg.d_model, d_ff, dtype=dtype),
+            "w_down": L.linear_init(ks[2], d_ff, cfg.d_model, dtype=dtype),
+        }
+    return {  # sq_relu: up + down only
+        "w_up": L.linear_init(ks[1], cfg.d_model, d_ff, dtype=dtype),
+        "w_down": L.linear_init(ks[2], d_ff, cfg.d_model, dtype=dtype),
+    }
+
+
+def ffn_apply(p, x, *, cfg: ModelConfig, kernels=L.DEFAULT_KERNELS):
+    if cfg.act == "swiglu":
+        h = L.swiglu(L.linear(p["w_gate"], x, name="w_gate", kernels=kernels),
+                     L.linear(p["w_up"], x, name="w_up", kernels=kernels))
+    else:
+        h = L.squared_relu(L.linear(p["w_up"], x, name="w_up", kernels=kernels))
+    return L.linear(p["w_down"], h, name="w_down", kernels=kernels)
+
+
+def _expert_weights(w, dtype):
+    """(E, K, N) expert tensor; GPTQ-quantized experts dequantize on the fly
+    (int4 reads — the HBM traffic the roofline should see)."""
+    from repro.core.gptq import QuantizedLinear
+    from repro.kernels.ref import dequant_ref
+    if isinstance(w, QuantizedLinear):
+        dq = jax.vmap(lambda qw, s, qz: dequant_ref(
+            qw, s, qz, group_size=w.group_size, dtype=dtype))
+        return dq(w.qweight, w.scales, w.qzeros)
+    return w.astype(dtype)
+
+
+# ------------------------------------------------------------------------ MoE
+def moe_init(rng, cfg: ModelConfig, dtype=jnp.float32):
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(rng, 5)
+    scale = d ** -0.5
+    p = {
+        "router": {"w": jax.random.normal(ks[0], (d, e), dtype) * scale},
+        "experts": {
+            "w_gate": jax.random.normal(ks[1], (e, d, f), dtype) * scale,
+            "w_up": jax.random.normal(ks[2], (e, d, f), dtype) * scale,
+            "w_down": jax.random.normal(ks[3], (e, f, d), dtype) * (f ** -0.5),
+        },
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = ffn_init(ks[4], cfg, d_ff=cfg.moe_d_ff * cfg.num_shared_experts,
+                               dtype=dtype)
+    return p
+
+
+def moe_apply(p, x, *, cfg: ModelConfig, kernels=L.DEFAULT_KERNELS):
+    """Returns (y, aux_loss). Sort-based dispatch:
+
+      1. router softmax -> top-k experts per token
+      2. rank each (token, k) pair within its expert via argsort
+      3. scatter into (G, E, C, d) capacity-padded buffers (overflow dropped)
+      4. batched expert SwiGLU einsums (active FLOPs only)
+      5. gather back, weight by gate prob, sum over k
+
+    ``cfg.moe_dispatch_groups`` (G) makes the rank/scatter LOCAL to each group
+    of T/G tokens: with G = dp shards and the group dim batch-sharded, the
+    scatter never crosses data-parallel shards — GSPMD emits no cross-shard
+    buffer all-reduce (the collective-term fix measured in EXPERIMENTS.md
+    §Perf) and each expert gets per-group capacity, matching how real EP
+    implementations drop tokens per-rank.
+    """
+    b, s, d = x.shape
+    e, topk = cfg.num_experts, cfg.num_experts_per_tok
+    t = b * s
+    g = cfg.moe_dispatch_groups if t % max(cfg.moe_dispatch_groups, 1) == 0 else 1
+    tl = t // g                                               # tokens per group
+    xt = x.reshape(t, d)
+
+    logits = L.linear(p["router"], xt.astype(jnp.float32), name="router",
+                      kernels=L.DEFAULT_KERNELS)              # router never quantized
+    probs = jax.nn.softmax(logits, axis=-1)                   # (T, E)
+    gate, expert_idx = jax.lax.top_k(probs, topk)             # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                                        # (E,)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], e), axis=0)
+    aux = cfg.router_aux_loss * e * jnp.sum(me * ce)
+
+    cap = int(cfg.capacity_factor * topk * tl / e) + 1
+    flat_e = expert_idx.reshape(g, tl * topk)                           # (G, Tl*k)
+    # rank of each assignment within (group, expert), stable in token order
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    ranks = jnp.broadcast_to(jnp.arange(tl * topk)[None], flat_e.shape)
+    rank_in_order = jnp.zeros_like(order).at[
+        jnp.arange(g)[:, None], order].set(ranks)
+    counts = jax.vmap(lambda fe: jnp.bincount(fe, length=e))(flat_e)    # (G, E)
+    starts = jnp.cumsum(counts, axis=1) - counts                        # (G, E)
+    slot = rank_in_order - jnp.take_along_axis(starts, flat_e, axis=1)  # (G, Tl*k)
+    valid = slot < cap
+    slot_c = jnp.where(valid, slot, cap - 1)
+
+    src = jnp.repeat(xt.reshape(g, tl, d)[:, :, None, :], topk,
+                     axis=2).reshape(g, tl * topk, d)
+    buf = jnp.zeros((g, e, cap, d), x.dtype)
+    gi = jnp.arange(g)[:, None]
+    buf = buf.at[gi, flat_e, slot_c].set(
+        jnp.where(valid[..., None], src, 0), mode="drop")
+    buf = L.constrain_moe(buf)   # (G, E, C, d): dp x EP sharding
+
+    we = {k: _expert_weights(v, x.dtype) for k, v in p["experts"].items()}
+    h = L.constrain_moe(
+        L.swiglu(jnp.einsum("gecd,edf->gecf", buf, we["w_gate"]),
+                 jnp.einsum("gecd,edf->gecf", buf, we["w_up"])))
+    out_buf = L.constrain_moe(jnp.einsum("gecf,efd->gecd", h, we["w_down"]))
+
+    gathered = out_buf[gi, flat_e, slot_c]                              # (G, Tl*k, d)
+    gathered = jnp.where(valid[..., None], gathered, 0)
+    y = (gathered.reshape(t, topk, d)
+         * gate[..., None].astype(x.dtype)).sum(axis=1)
+
+    if "shared" in p:
+        y = y + ffn_apply(p["shared"], xt, cfg=cfg, kernels=kernels)
+    return y.reshape(b, s, d), aux
+
+
+# --------------------------------------------------- shard_map expert parallel
+def moe_apply_ep(p, x, *, cfg: ModelConfig, kernels=L.DEFAULT_KERNELS):
+    """True EP: per-shard capacity buckets exchanged with ``all_to_all`` over
+    the model axis. Collective cost per layer = 2 x bucket bytes (~tokens*d),
+    vs the GSPMD-auto einsum path's full-buffer mask+all-reduce (measured 40x
+    wire reduction on deepseek-v2 train — EXPERIMENTS.md §Perf cell A).
+
+    Requirements: EP context set (layers.set_moe_ep), E % tp == 0, unquantized
+    expert weights (training path). Falls back to ``moe_apply`` otherwise.
+    """
+    from repro.core.gptq import QuantizedLinear
+    ctx = L.moe_ep_context()
+    e, topk = cfg.num_experts, cfg.num_experts_per_tok
+    if ctx is None or isinstance(p["experts"]["w_gate"], QuantizedLinear):
+        return moe_apply(p, x, cfg=cfg, kernels=kernels)
+    mesh, fsdp_ax, model_ax, batch_axes = ctx
+    tp = mesh.shape[model_ax]
+    if e % tp != 0:
+        return moe_apply(p, x, cfg=cfg, kernels=kernels)
+    from jax.sharding import PartitionSpec as P
+
+    b, s, d = x.shape
+    e_loc = e // tp
+    f = cfg.moe_d_ff
+
+    # router outside shard_map (tiny output; weights follow their own specs)
+    logits = L.linear(p["router"], x.astype(jnp.float32), name="router")
+    probs = jax.nn.softmax(logits, axis=-1)                       # (B, S, E)
+    gate, expert_idx = jax.lax.top_k(probs, topk)                 # (B, S, k)
+    gate = (gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)).astype(x.dtype)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], e), axis=(0, 1))
+    aux = cfg.router_aux_loss * e * jnp.sum(me * ce)
+
+    seq_shardable = s % tp == 0
+    seq_ax = model_ax if seq_shardable else None
+    bspec = batch_axes or None
+
+    def body(xb, gateb, idxb, wg, wu, wd):
+        # xb: (B/dp, S/tp, d); wg/wu: (e_loc, d/fsdp, f); wd: (e_loc, f, d/fsdp)
+        wg = jax.lax.all_gather(wg, fsdp_ax, axis=1, tiled=True)
+        wu = jax.lax.all_gather(wu, fsdp_ax, axis=1, tiled=True)
+        wd = jax.lax.all_gather(wd, fsdp_ax, axis=2, tiled=True)
+        bl, sl, _ = xb.shape
+        tl = bl * sl
+        xt = xb.reshape(tl, d)
+        ib = idxb.reshape(tl * topk)                              # global e id
+        gb = gateb.reshape(tl * topk)
+        tgt = ib // e_loc                                         # owner rank
+        le = ib % e_loc
+        cap = int(cfg.capacity_factor * topk * tl / e) + 1
+
+        order = jnp.argsort(ib, stable=True)
+        rank_in = jnp.zeros_like(order).at[order].set(jnp.arange(tl * topk))
+        counts = jnp.bincount(ib, length=e)
+        starts = jnp.cumsum(counts) - counts
+        slot = rank_in - starts[ib]
+        valid = slot < cap
+        slot_c = jnp.where(valid, slot, cap - 1)
+
+        src = jnp.repeat(xt[:, None, :], topk, axis=1).reshape(tl * topk, d)
+        buckets = jnp.zeros((tp, e_loc, cap, d), x.dtype)
+        buckets = buckets.at[tgt, le, slot_c].set(
+            jnp.where(valid[:, None], src, 0), mode="drop")
+        # exchange: rank i's bucket j -> rank j (the EP all-to-all)
+        recv = jax.lax.all_to_all(buckets, model_ax, split_axis=0,
+                                  concat_axis=0, tiled=True)
+        toks = jnp.moveaxis(recv, 0, 1).reshape(e_loc, tp * cap, d)
+        h = L.swiglu(jnp.einsum("ecd,edf->ecf", toks, wg.astype(x.dtype)),
+                     jnp.einsum("ecd,edf->ecf", toks, wu.astype(x.dtype)))
+        out = jnp.einsum("ecf,efd->ecd", h, wd.astype(x.dtype))
+        outb = jnp.moveaxis(out.reshape(e_loc, tp, cap, d), 1, 0)
+        back = jax.lax.all_to_all(outb, model_ax, split_axis=0,
+                                  concat_axis=0, tiled=True)
+        gathered = back[tgt, le, slot_c]
+        gathered = jnp.where(valid[:, None], gathered, 0)
+        y = (gathered.reshape(tl, topk, d) * gb.reshape(tl, topk)[..., None]
+             ).sum(axis=1)
+        return y.reshape(bl, sl, d)
+
+    we = p["experts"]
+    in_specs = (P(bspec, seq_ax, None), P(bspec, seq_ax, None),
+                P(bspec, seq_ax, None),
+                P(model_ax, fsdp_ax, None), P(model_ax, fsdp_ax, None),
+                P(model_ax, None, fsdp_ax))
+    try:
+        shard = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                              out_specs=P(bspec, seq_ax, None),
+                              check_vma=False)
+    except TypeError:   # older jax spells the kwarg check_rep
+        shard = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                              out_specs=P(bspec, seq_ax, None),
+                              check_rep=False)
+    y = shard(x, gate, expert_idx,
+              we["w_gate"].astype(x.dtype), we["w_up"].astype(x.dtype),
+              we["w_down"].astype(x.dtype))
+    if "shared" in p:
+        y = y + ffn_apply(p["shared"], x, cfg=cfg, kernels=kernels)
+    return y, aux

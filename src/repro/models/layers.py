@@ -1,0 +1,256 @@
+"""Shared layer primitives: linear (fp + GPTQ dispatch + calibration capture),
+norms, RoPE / M-RoPE, embeddings.
+
+Params are plain nested dicts of jnp arrays; every function is pure. The only
+impurity is the module-level calibration capture context, used exclusively by
+the (unjitted, unrolled) GPTQ calibration pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gptq import QuantizedLinear, accumulate_hessian
+from repro.core.opt_strategies import KernelStrategy, OPT4GPTQ
+from repro.kernels import ops as kops
+
+
+# --------------------------------------------------------- calibration capture
+@dataclasses.dataclass
+class CaptureContext:
+    hessians: dict[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
+    counts: dict[str, int] = dataclasses.field(default_factory=dict)
+    active: bool = False
+
+    def add(self, name: str, x: jnp.ndarray):
+        self.hessians[name] = accumulate_hessian(self.hessians.get(name), x)
+        self.counts[name] = self.counts.get(name, 0) + int(
+            x.reshape(-1, x.shape[-1]).shape[0])
+
+
+_CAPTURE = CaptureContext()
+_NAME_STACK: list[str] = []
+
+
+class name_scope:
+    """Qualifies capture names per layer (calibration runs unscanned/unjitted)."""
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def __enter__(self):
+        _NAME_STACK.append(self.name)
+        return self
+
+    def __exit__(self, *exc):
+        _NAME_STACK.pop()
+        return False
+
+
+def qualified(name: str) -> str:
+    return ".".join(_NAME_STACK + [name]) if _NAME_STACK else name
+
+
+def capture_context() -> CaptureContext:
+    return _CAPTURE
+
+
+class capture_hessians:
+    """with capture_hessians() as ctx: model.apply(...)  (unjitted only)."""
+
+    def __enter__(self):
+        global _CAPTURE
+        _CAPTURE = CaptureContext(active=True)
+        return _CAPTURE
+
+    def __exit__(self, *exc):
+        _CAPTURE.active = False
+        return False
+
+
+# -------------------------------------------------- activation sharding hooks
+# Set by launch code (trace-time static): constrains (B, S, D) activations so
+# GSPMD shards scan carries / saved residuals instead of replicating them, and
+# (B, S, H, D) / (B, H, Sq, Sk) attention tensors so logits shard over heads
+# (GSPMD pads when H doesn't divide the axis — e.g. hymba's 25 heads / 16).
+_ACT_SPEC = None      # (B, S, D)
+_HEADS_SPEC = None    # (B, S, H, D)
+_LOGITS_SPEC = None   # (B, H, Sq, Sk)
+_MOE_SPEC = None      # (E, C, d/f) dispatch buffers
+
+
+def set_act_sharding(spec, heads_spec=None, logits_spec=None, moe_spec=None):
+    """specs: jax.sharding.PartitionSpec or None."""
+    global _ACT_SPEC, _HEADS_SPEC, _LOGITS_SPEC, _MOE_SPEC
+    _ACT_SPEC = spec
+    _HEADS_SPEC = heads_spec
+    _LOGITS_SPEC = logits_spec
+    _MOE_SPEC = moe_spec
+
+
+def constrain_moe(x):
+    if _MOE_SPEC is None or x.ndim != 4:
+        return x
+    return jax.lax.with_sharding_constraint(x, _MOE_SPEC)
+
+
+# shard_map expert-parallel context: (mesh, fsdp_axis, model_axis, batch_axes)
+_MOE_EP = None
+
+
+def set_moe_ep(mesh, fsdp_axis: str, model_axis: str, batch_axes):
+    global _MOE_EP
+    _MOE_EP = None if mesh is None else (mesh, fsdp_axis, model_axis,
+                                         batch_axes)
+
+
+def moe_ep_context():
+    return _MOE_EP
+
+
+def constrain_act(x):
+    if _ACT_SPEC is None or x.ndim != 3:
+        return x
+    return jax.lax.with_sharding_constraint(x, _ACT_SPEC)
+
+
+def constrain_heads(x):
+    if _HEADS_SPEC is None or x.ndim != 4:
+        return x
+    return jax.lax.with_sharding_constraint(x, _HEADS_SPEC)
+
+
+def constrain_logits(x):
+    if _LOGITS_SPEC is None or x.ndim != 4:
+        return x
+    return jax.lax.with_sharding_constraint(x, _LOGITS_SPEC)
+
+
+# ------------------------------------------------------------------ kernel cfg
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """How quantized linears execute (threaded through model apply fns)."""
+    strategy: KernelStrategy = OPT4GPTQ
+    use_pallas: bool = False          # False: jnp ref path (CPU / dry-run)
+    block_sizes: tuple[int, int, int] | None = None
+
+
+DEFAULT_KERNELS = KernelConfig()
+
+
+# ---------------------------------------------------------------------- linear
+def linear_init(rng, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.float32, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": jax.random.normal(rng, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x: jnp.ndarray, *, name: str = "",
+           kernels: KernelConfig = DEFAULT_KERNELS) -> jnp.ndarray:
+    """Apply a linear layer; dispatches on param type (fp vs GPTQ-quantized)."""
+    if _CAPTURE.active and name:
+        _CAPTURE.add(qualified(name), x)
+    w = p["w"]
+    if isinstance(w, QuantizedLinear):
+        y = kops.gptq_linear(w, x, strategy=kernels.strategy,
+                             use_pallas=kernels.use_pallas,
+                             block_sizes=kernels.block_sizes)
+    else:
+        y = jnp.dot(x, w.astype(x.dtype))
+    if "b" in p and p["b"] is not None:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ----------------------------------------------------------------------- norms
+def norm_init(d: int, norm_type: str = "rmsnorm", dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p, x: jnp.ndarray, *, norm_type: str = "rmsnorm",
+               eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6):
+    """qk-norm: RMSNorm over the head_dim of (..., H, D)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------------ RoPE
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               mrope_sections: tuple[int, ...] | None = None) -> jnp.ndarray:
+    """x: (B, S, H, D). positions: (B, S) int32, or (3, B, S) for M-RoPE
+    (temporal/height/width sections, qwen2-vl)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                                    # (D/2,)
+    if mrope_sections is not None and positions.ndim == 3:
+        # split the D/2 frequencies into t/h/w sections, each using its own pos
+        secs = mrope_sections
+        assert sum(secs) == d // 2, (secs, d)
+        pos_parts = []
+        start = 0
+        for i, s in enumerate(secs):
+            pos_parts.append(jnp.broadcast_to(positions[i][..., None],
+                                              positions.shape[1:] + (s,)))
+            start += s
+        pos = jnp.concatenate(pos_parts, axis=-1)                 # (B, S, D/2)
+        ang = pos.astype(jnp.float32) * inv[None, None, :]
+    else:
+        if positions.ndim == 3:
+            positions = positions[0]
+        ang = positions[..., None].astype(jnp.float32) * inv[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]                             # (B, S, 1, D/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ embeddings
+def embed_init(rng, vocab: int, d: int, dtype=jnp.float32):
+    return {"embedding": jax.random.normal(rng, (vocab, d), dtype) * 0.02}
+
+
+def embed_lookup(p, ids: jnp.ndarray, dtype) -> jnp.ndarray:
+    return jnp.take(p["embedding"], ids, axis=0).astype(dtype)
+
+
+def embed_logits(p, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied output head: logits = x @ E^T (f32 for stability)."""
+    return jnp.dot(x.astype(jnp.float32),
+                   p["embedding"].astype(jnp.float32).T)
+
+
+# ------------------------------------------------------------------ activations
+def swiglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def squared_relu(x: jnp.ndarray) -> jnp.ndarray:
+    r = jax.nn.relu(x)
+    return r * r

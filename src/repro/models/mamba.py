@@ -1,0 +1,76 @@
+"""Mamba-1 block (falcon-mamba / hymba SSM head): causal depthwise conv +
+selective scan. Decode carries (conv_state, ssm_state) — O(1) per token."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.ref import selective_scan_ref
+from repro.models import layers as L
+
+
+def mamba_init(rng, cfg: ModelConfig, dtype=jnp.float32):
+    d, di, s, dr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    ks = jax.random.split(rng, 5)
+    a = jnp.broadcast_to(jnp.arange(1, s + 1, dtype=jnp.float32)[None, :], (di, s))
+    return {
+        "in_proj": L.linear_init(ks[0], d, 2 * di, dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, di), dtype) * 0.2,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": L.linear_init(ks[2], di, dr + 2 * s, dtype=dtype),
+        "dt_proj": L.linear_init(ks[3], dr, di, bias=True, dtype=dtype),
+        "A_log": jnp.log(a).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": L.linear_init(ks[4], di, d, dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """x: (B, S, Di); w: (K, Di) depthwise. conv_state: (B, K-1, Di) history."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                     # (B, S+K-1, Di)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    new_state = xp[:, -(k - 1):, :]
+    return out + b[None, None, :], new_state
+
+
+def mamba_apply(p, x, *, cfg: ModelConfig, kernels=L.DEFAULT_KERNELS,
+                cache=None):
+    """Returns (y, new_cache). cache = {"conv": (B,K-1,Di), "ssm": (B,Di,S)}."""
+    b, s, d = x.shape
+    di, ds, dr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xz = L.linear(p["in_proj"], x, name="in_proj", kernels=kernels)
+    xi, z = xz[..., :di], xz[..., di:]
+
+    conv_state = cache["conv"] if cache is not None else None
+    xi, new_conv = _causal_conv(xi, p["conv_w"].astype(x.dtype),
+                                p["conv_b"].astype(x.dtype), conv_state)
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(x.dtype)
+
+    xdbc = L.linear(p["x_proj"], xi, name="x_proj", kernels=kernels)
+    dt = L.linear(p["dt_proj"], xdbc[..., :dr], name="dt_proj", kernels=kernels)
+    bmat = xdbc[..., dr:dr + ds].astype(jnp.float32)            # (B,S,ds)
+    cmat = xdbc[..., dr + ds:].astype(jnp.float32)
+
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                # (Di, ds)
+    h0 = cache["ssm"] if cache is not None else None
+    y, h_last = selective_scan_ref(xi, dt, a, bmat, cmat,
+                                   p["D"].astype(jnp.float32), h0=h0)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = L.linear(p["out_proj"], y, name="out_proj", kernels=kernels)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype), "ssm": h_last}
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }

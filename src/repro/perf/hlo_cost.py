@@ -1,0 +1,419 @@
+"""While-aware cost model over post-SPMD HLO text.
+
+XLA's ``cost_analysis()`` counts a ``while`` body ONCE regardless of trip
+count, which under-reports every scanned-layer model by ~num_layers x
+(verified empirically — see EXPERIMENTS.md §Roofline methodology). This module
+re-derives the three roofline inputs from ``compiled.as_text()``:
+
+  * FLOPs           — every ``dot`` op (2 * batch * m * n * k from shapes +
+                      contracting dims), times its computation's execution
+                      count. Elementwise flops are excluded (<5% for LMs).
+  * HBM bytes       — post-fusion op boundaries approximate HBM round trips:
+                      each top-level op charges operand + result bytes, with
+                      in-place ops (dynamic-update-slice / scatter / aliased
+                      fusions) charged only their touched region.
+  * collective wire — ring-cost factors per op kind (see roofline.py).
+
+Execution counts come from the call graph: ENTRY=1, while bodies multiply by
+``known_trip_count``, fusions/to_apply inherit their caller's count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(.*\{$")
+_OP_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_RE2 = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_B_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+_ALIAS_RE = re.compile(r"output_to_operand_aliasing=\{[^=]*\}")
+
+SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast", "while",
+    "conditional", "after-all", "iota", "partition-id", "replica-id",
+    "get-dimension-size", "domain", "opt-barrier", "call",
+}
+COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "ragged-all-to-all", "collective-permute", "all-reduce-start",
+               "all-gather-start", "collective-permute-start"}
+
+
+def _shape_dims(shape_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result: str
+    opcode: str
+    operands: list[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op] = dataclasses.field(default_factory=list)
+    symbols: dict = dataclasses.field(default_factory=dict)
+
+
+def parse_module(text: str) -> tuple[dict[str, Computation], str | None]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        m = _HEADER_RE.match(line)
+        if m and line.rstrip().endswith("{"):
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        om = _OP_HEAD_RE.match(line)
+        if not om:
+            continue
+        name = om.group(1)
+        rest = line[om.end():]
+        # result type: balanced-paren tuple "(...)" (may contain /*index=N*/
+        # comments) or a plain "dtype[dims]{layout}" token
+        if rest.startswith("("):
+            depth, i = 0, 0
+            while i < len(rest):
+                if rest[i] == "(":
+                    depth += 1
+                elif rest[i] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        i += 1
+                        break
+                i += 1
+            result = rest[:i]
+            rest = rest[i:].lstrip()
+        else:
+            sp = rest.find(" ")
+            if sp < 0:
+                continue
+            result = rest[:sp]
+            rest = rest[sp + 1:]
+        opm = re.match(r"([\w\-]+)\(", rest)
+        if not opm:
+            continue
+        opcode = opm.group(1)
+        # operands: %-tokens inside the first balanced paren group after opcode
+        rest2 = rest[opm.end():]
+        depth, i = 1, 0
+        while i < len(rest2) and depth:
+            if rest2[i] == "(":
+                depth += 1
+            elif rest2[i] == ")":
+                depth -= 1
+            i += 1
+        operand_str = rest2[:i - 1] if i else ""
+        operands = re.findall(r"%([\w\.\-]+)", operand_str)
+        op = Op(name, result, opcode, operands, line)
+        cur.ops.append(op)
+        cur.symbols[name] = result
+    return comps, entry
+
+
+def execution_counts(comps: dict[str, Computation], entry: str) -> dict[str, float]:
+    counts: dict[str, float] = defaultdict(float)
+    counts[entry] = 1.0
+    # edges: (caller -> callee, multiplier)
+    edges: dict[str, list[tuple[str, float]]] = defaultdict(list)
+    for c in comps.values():
+        for op in c.ops:
+            if op.opcode == "while":
+                trip = 1.0
+                tm = _TRIP_RE.search(op.line)
+                if tm:
+                    trip = float(tm.group(1))
+                bm = _BODY_RE.search(op.line)
+                cm = _COND_RE.search(op.line)
+                if bm:
+                    edges[c.name].append((bm.group(1), trip))
+                if cm:
+                    edges[c.name].append((cm.group(1), trip + 1))
+            else:
+                for rx in (_CALLS_RE, _TO_APPLY_RE):
+                    mm = rx.search(op.line)
+                    if mm:
+                        edges[c.name].append((mm.group(1), 1.0))
+    # propagate through the (acyclic) call graph to a fixed point
+    for _ in range(100):
+        new_counts: dict[str, float] = defaultdict(float)
+        new_counts[entry] = 1.0
+        for caller, outs in edges.items():
+            base = counts.get(caller, 0.0)
+            if base == 0:
+                continue
+            for callee, mult in outs:
+                new_counts[callee] += base * mult
+        new_counts[entry] = 1.0
+        if dict(new_counts) == dict(counts):
+            break
+        counts = new_counts
+    return counts
+
+
+def _dot_flops(op: Op, symbols: dict) -> float:
+    lhs = symbols.get(op.operands[0]) if op.operands else None
+    if lhs is None:
+        return 0.0
+    dims_info = _shape_dims(lhs)
+    if not dims_info:
+        return 0.0
+    lhs_dims = dims_info[0][1]
+    res_info = _shape_dims(op.result)
+    res_elems = 1
+    for _, dims in res_info:
+        for d in dims:
+            res_elems *= d
+    contract = 1
+    cm = _LHS_C_RE.search(op.line)
+    if cm:
+        for idx in cm.group(1).split(","):
+            if idx:
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * res_elems * contract
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE2.search(line)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip()]), 1)
+    return default
+
+
+def _wire_bytes(op: Op, n_devices: int) -> float:
+    size = shape_bytes(op.result)
+    kind = op.opcode.replace("-start", "")
+    g = _group_size(op.line, n_devices)
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2 * size * (g - 1) / g
+    if kind == "all-gather":
+        return size * (g - 1) / g
+    if kind == "reduce-scatter":
+        return size * (g - 1)
+    if kind in ("all-to-all", "ragged-all-to-all"):
+        return size * (g - 1) / g
+    if kind == "collective-permute":
+        return float(size)
+    return 0.0
+
+
+SLICE_OPS = {"dynamic-slice", "gather"}
+INPLACE_OPS = {"dynamic-update-slice", "scatter"}
+
+
+def _fusion_inplace_root(op: Op, comps: dict) -> int | None:
+    """If the fused computation's ROOT is (a convert/bitcast chain over) a
+    dynamic-update-slice whose target traces back to a parameter, return that
+    parameter's index: the fusion is an in-place update and its traffic is
+    the update region, not the full buffer. (XLA:CPU's bf16 float
+    normalization wraps cache DUS ops in whole-buffer f32 converts — a
+    backend artifact TPU does not have; see EXPERIMENTS.md methodology.)"""
+    m = _CALLS_RE.search(op.line)
+    if not m or m.group(1) not in comps:
+        return None
+    inner = comps[m.group(1)]
+    param_of: dict[str, int] = {}
+    by_name: dict[str, Op] = {}
+    root = None
+    for iop in inner.ops:
+        by_name[iop.name] = iop
+        if iop.opcode == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", iop.line)
+            if pm:
+                param_of[iop.name] = int(pm.group(1))
+        if "ROOT" in iop.line:
+            root = iop
+    if root is None and inner.ops:
+        root = inner.ops[-1]
+
+    def walk(name_or_op, depth=0):
+        o = name_or_op if isinstance(name_or_op, Op) else by_name.get(name_or_op)
+        while o is not None and depth < 8 and o.opcode in ("convert", "bitcast",
+                                                           "copy", "reshape"):
+            o = by_name.get(o.operands[0]) if o.operands else None
+            depth += 1
+        return o
+
+    dus = walk(root)
+    if dus is None or dus.opcode != "dynamic-update-slice" or not dus.operands:
+        return None
+    target = walk(dus.operands[0])
+    if target is not None and target.name in param_of:
+        return param_of[target.name]
+    return None
+
+
+def _fusion_sliced_params(op: Op, comps: dict) -> set[int]:
+    """Parameter indices of a fusion that are consumed ONLY by slice/gather
+    ops inside the fused computation (HBM reads the slice, not the operand)."""
+    m = _CALLS_RE.search(op.line)
+    if not m or m.group(1) not in comps:
+        return set()
+    inner = comps[m.group(1)]
+    param_of: dict[str, int] = {}
+    for iop in inner.ops:
+        if iop.opcode == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", iop.line)
+            if pm:
+                param_of[iop.name] = int(pm.group(1))
+    sliced: dict[int, bool] = {}
+    for iop in inner.ops:
+        for o in iop.operands:
+            if o in param_of:
+                idx = param_of[o]
+                is_slice = (iop.opcode in SLICE_OPS
+                            or (iop.opcode in INPLACE_OPS and iop.operands
+                                and iop.operands[0] == o))
+                sliced[idx] = sliced.get(idx, True) and is_slice
+    return {i for i, ok in sliced.items() if ok}
+
+
+def _hbm_bytes(op: Op, symbols: dict, comps: dict | None = None) -> float:
+    oc = op.opcode
+    if oc in SKIP_BYTES_OPS or oc.endswith("-done"):
+        return 0.0
+    if oc in INPLACE_OPS:
+        # in-place: charge read+write of the update region + indices
+        upd = symbols.get(op.operands[1], "") if len(op.operands) > 1 else ""
+        idx = sum(shape_bytes(symbols.get(o, "")) for o in op.operands[2:])
+        return 2.0 * shape_bytes(upd) + idx
+    if oc in SLICE_OPS:
+        idx = sum(shape_bytes(symbols.get(o, "")) for o in op.operands[1:])
+        return 2.0 * shape_bytes(op.result) + idx
+    result_b = float(shape_bytes(op.result))
+    total = result_b
+    operands = list(op.operands)
+    sizes = [shape_bytes(symbols.get(o, "")) for o in operands]
+    if _ALIAS_RE.search(op.line):
+        # in-place (DUS-style) fusion: the aliased buffer is neither fully
+        # read nor fully written — traffic ~= read update + write region
+        if sizes:
+            sizes.remove(max(sizes))
+        return 2.0 * sum(sizes)
+    if oc == "fusion" and comps is not None:
+        ip = _fusion_inplace_root(op, comps)
+        if ip is not None and ip < len(sizes):
+            # in-place DUS fusion: read+write the update region only
+            rest = [s for j, s in enumerate(sizes) if j != ip]
+            return 2.0 * sum(rest)
+        sliced = _fusion_sliced_params(op, comps)
+        for i in sliced:
+            if i < len(sizes):
+                # operand only sliced inside: charge the slice (~result size)
+                sizes[i] = min(sizes[i], int(result_b))
+    return total + sum(sizes)
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float                 # per device, dots only, while-corrected
+    hbm_bytes: float             # per device, post-fusion op boundaries
+    wire_bytes: float            # per device, ring-cost collectives
+    collectives: dict
+    n_while: int
+    max_trip: float
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze_text(text: str, n_devices: int) -> HloCost:
+    comps, entry = parse_module(text)
+    if entry is None:
+        return HloCost(0, 0, 0, {}, 0, 0)
+    counts = execution_counts(comps, entry)
+
+    # computations reachable ONLY as fusion/apply bodies: flops yes, bytes no.
+    byte_comps = {entry}
+    for c in comps.values():
+        for op in c.ops:
+            if op.opcode == "while":
+                bm = _BODY_RE.search(op.line)
+                cm = _COND_RE.search(op.line)
+                if bm:
+                    byte_comps.add(bm.group(1))
+                if cm:
+                    byte_comps.add(cm.group(1))
+            elif op.opcode == "call":
+                mm = _TO_APPLY_RE.search(op.line)
+                if mm:
+                    byte_comps.add(mm.group(1))
+
+    flops = 0.0
+    hbm = 0.0
+    wire = 0.0
+    coll: dict = {}
+    n_while = 0
+    max_trip = 0.0
+    for c in comps.values():
+        n = counts.get(c.name, 0.0)
+        if n == 0:
+            continue
+        for op in c.ops:
+            if op.opcode == "while":
+                n_while += 1
+                tm = _TRIP_RE.search(op.line)
+                if tm:
+                    max_trip = max(max_trip, float(tm.group(1)))
+            if op.opcode in ("dot", "convolution"):
+                flops += n * _dot_flops(op, c.symbols)
+            if op.opcode in COLLECTIVES:
+                w = n * _wire_bytes(op, n_devices)
+                wire += w
+                k = coll.setdefault(op.opcode.replace("-start", ""),
+                                    {"bytes": 0.0, "count": 0})
+                k["bytes"] += w
+                k["count"] += int(n)
+            if c.name in byte_comps:
+                hbm += n * _hbm_bytes(op, c.symbols, comps)
+    return HloCost(flops=flops, hbm_bytes=hbm, wire_bytes=wire,
+                   collectives=coll, n_while=n_while, max_trip=max_trip)

@@ -1,0 +1,136 @@
+"""Analytic per-device HBM accounting for the dry-run "fits" verdict.
+
+The CPU backend's ``memory_analysis()`` is reported alongside but inflates
+bf16 loop state ~3x: XLA CPU's float-normalization-bf16 pass rewrites bf16
+compute to f32 (no native CPU bf16) and keeps both copies of the remat
+residual stack live (verified pass-by-pass; see EXPERIMENTS.md §Dry-run
+methodology). TPU executes bf16 natively, so the CPU number is a backend
+artifact, not the deployment footprint.
+
+Static state (params / optimizer / gradients / KV caches) is computed EXACTLY
+from each leaf's PartitionSpec (ceil-division per sharded dim — padding
+included). Activations use a structural peak model of the compiled program:
+remat residual stack + one layer's live working set + chunked loss block.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _leaf_device_bytes(leaf, sharding, mesh) -> int:
+    spec = getattr(sharding, "spec", None)
+    dims = list(leaf.shape)
+    if spec is not None:
+        for i, ax in enumerate(spec):
+            if ax is None or i >= len(dims):
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            dims[i] = math.ceil(dims[i] / n)
+    n = 1
+    for d in dims:
+        n *= d
+    return n * jnp.dtype(leaf.dtype).itemsize
+
+
+def sharded_state_bytes(abstract_tree, shardings, mesh) -> int:
+    leaves = jax.tree_util.tree_leaves(abstract_tree)
+    shards = jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda s: hasattr(s, "spec"))
+    assert len(leaves) == len(shards), (len(leaves), len(shards))
+    return sum(_leaf_device_bytes(l, s, mesh) for l, s in zip(leaves, shards))
+
+
+@dataclasses.dataclass
+class MemoryEstimate:
+    state_gb: float          # params (+opt/grads for train), exact from specs
+    cache_gb: float          # KV/SSM cache (serving), exact from specs
+    residual_gb: float       # remat-saved residual stack
+    working_gb: float        # peak per-layer live set + loss block
+    total_gb: float
+    fits_16gb: bool
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def activation_terms(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                     *, seq_sharded: bool) -> tuple[float, float]:
+    """(residual_bytes, working_bytes) per device."""
+    from repro.sharding import partition as SP
+    r = SP.rules_for_mesh(mesh)
+    bax = SP._bax_for(mesh, r, shape.global_batch)
+    dp = 1
+    for a in bax:
+        dp *= mesh.shape[a]
+    tp = mesh.shape[r.tp]
+
+    train = shape.kind == "train"
+    s = shape.seq_len if shape.kind != "decode" else 1
+    s_tot = s + (cfg.meta_tokens if shape.kind != "decode" else 0)
+    b_loc = math.ceil(shape.global_batch / dp)
+    act = 2  # bf16
+
+    # remat residual stack: L x B_loc x S x D (seq-sharded when enabled)
+    resid = 0.0
+    if train:
+        seq_div = tp if (seq_sharded and s_tot % tp == 0) else 1
+        resid = cfg.num_layers * b_loc * (s_tot // seq_div) * cfg.d_model * act
+
+    # one live layer working set (remat recompute peak)
+    h_loc = math.ceil(max(cfg.num_heads, 1) / tp)
+    qk_chunk = min(s_tot, cfg.attn_q_chunk)
+    attn_logits = b_loc * h_loc * qk_chunk * s_tot * 4 * (3 if train else 2)
+    qkv = b_loc * s_tot * (3 * math.ceil(
+        max(cfg.num_heads, 1) * max(cfg.head_dim, 1) / tp)) * act
+    if cfg.family == "ssm" or cfg.family == "hybrid":
+        di_loc = math.ceil(cfg.d_inner / tp)
+        ssm_ws = b_loc * s_tot * di_loc * (4 + cfg.ssm_state * 0) * 4 \
+            + b_loc * di_loc * cfg.ssm_state * 4 * 2
+    else:
+        ssm_ws = 0
+    d_ff = cfg.moe_d_ff if cfg.num_experts else cfg.d_ff
+    if cfg.num_experts:
+        t_glob = shape.global_batch * s
+        cap_tokens = cfg.capacity_factor * cfg.num_experts_per_tok * t_glob
+        ffn_ws = cap_tokens * (cfg.d_model + 2 * d_ff) * act / (tp * dp)
+        ffn_ws += (cfg.num_shared_experts * 2
+                   * b_loc * s_tot * math.ceil(
+                       cfg.moe_d_ff * cfg.num_shared_experts / tp) * act
+                   if cfg.num_shared_experts else 0)
+    else:
+        ffn_ws = b_loc * s_tot * math.ceil(d_ff / tp) * act * (3 if cfg.act == "swiglu" else 2)
+    layer_ws = attn_logits + qkv + ssm_ws + ffn_ws
+
+    # chunked loss block (train): B_loc x chunk x V/tp fp32, ~2 copies
+    loss_ws = 0.0
+    if train:
+        chunk = min(1024, s)
+        loss_ws = b_loc * chunk * math.ceil(cfg.vocab_size / tp) * 4 * 2
+    # decode/prefill logits head block
+    if not train:
+        loss_ws = b_loc * (1 if shape.kind == "decode" else 1) \
+            * math.ceil(cfg.vocab_size / tp) * 4 * 2
+    return float(resid), float(layer_ws + loss_ws)
+
+
+def estimate(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+             state_abs, state_shardings, cache_abs=None, cache_shardings=None,
+             seq_sharded: bool = True, hbm_gb: float = 16.0) -> MemoryEstimate:
+    state = sharded_state_bytes(state_abs, state_shardings, mesh)
+    cache = (sharded_state_bytes(cache_abs, cache_shardings, mesh)
+             if cache_abs is not None else 0)
+    resid, work = activation_terms(cfg, shape, mesh, seq_sharded=seq_sharded)
+    total = state + cache + resid + work
+    return MemoryEstimate(
+        state_gb=state / 1e9, cache_gb=cache / 1e9, residual_gb=resid / 1e9,
+        working_gb=work / 1e9, total_gb=total / 1e9,
+        fits_16gb=total < hbm_gb * 1e9)

@@ -1,0 +1,86 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run result cache. Usage:
+
+  PYTHONPATH=src python -m repro.perf.report > experiments/tables.md
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def load(mesh: str | None = None):
+    recs = []
+    for f in sorted(RESULTS.glob("*.json")):
+        r = json.loads(f.read_text())
+        if mesh and not r["cell"].endswith(mesh):
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_bytes(gb):
+    return f"{gb:.2f}"
+
+
+def dryrun_table() -> str:
+    out = ["| cell | status | mesh | state GB/dev | cache GB/dev | resid GB/dev | work GB/dev | total GB/dev | fits 16GB | compile s |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in load():
+        if r["status"] == "skipped":
+            out.append(f"| {r['cell']} | SKIP: {r['reason'][:60]} | | | | | | | | |")
+            continue
+        if r["status"] == "failed":
+            out.append(f"| {r['cell']} | **FAILED** | | | | | | | | |")
+            continue
+        m = r["memory"]
+        mesh = "2x16x16" if r["multi_pod"] else "16x16"
+        out.append(
+            f"| {r['cell']} | ok | {mesh} | {m['state_gb']:.2f} | {m['cache_gb']:.2f} "
+            f"| {m['residual_gb']:.2f} | {m['working_gb']:.2f} | **{m['total_gb']:.2f}** "
+            f"| {'yes' if m['fits_16gb'] else 'NO'} | {r['compile_s']:.0f} |")
+    return "\n".join(out)
+
+
+def roofline_table(mesh="singlepod") -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | dominant | MODEL/HLO flops | wire GB/dev | what would move the dominant term |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in load(mesh):
+        if r["status"] != "ok":
+            continue
+        ro = r["roofline"]
+        hint = _hint(r)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.3f} | {ro['memory_s']:.3f} "
+            f"| {ro['collective_s']:.3f} | **{ro['dominant']}** | {ro['useful_ratio']:.3f} "
+            f"| {ro['wire_bytes_per_dev'] / 1e9:.1f} | {hint} |")
+    return "\n".join(out)
+
+
+def _hint(r) -> str:
+    ro = r["roofline"]
+    dom = ro["dominant"]
+    colls = ro.get("collectives", {})
+    big = max(colls, key=lambda k: colls[k]["bytes"]) if colls else "none"
+    if dom == "collective":
+        return f"cut {big} volume (sharding/layout: see §Perf)"
+    if dom == "memory":
+        if r["shape"].startswith("decode"):
+            return "KV cache reads dominate; quantize/shard cache further"
+        return "fuse elementwise chains; raise arithmetic intensity (remat policy)"
+    return "already compute-bound; raise MFU via larger per-chip tiles"
+
+
+def main():
+    print("## §Dry-run (generated)\n")
+    print(dryrun_table())
+    print("\n## §Roofline — single-pod 16x16 (generated)\n")
+    print(roofline_table("singlepod"))
+    print("\n## §Roofline — multi-pod 2x16x16 (generated)\n")
+    print(roofline_table("multipod"))
+
+
+if __name__ == "__main__":
+    main()

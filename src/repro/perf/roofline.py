@@ -1,0 +1,181 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = wire_bytes_per_device / link_bw
+
+``cost_analysis()`` on a post-SPMD executable reports the PER-DEVICE program
+(verified empirically: matmul flops / n_devices), so the per-chip form above
+equals the prompt's global form HLO/(chips x peak).
+
+Collective bytes are parsed from ``compiled.as_text()`` (post-SPMD HLO), using
+standard ring-algorithm wire-cost factors per op kind.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e hardware constants (DESIGN.md)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link (1 effective link assumed)
+HBM_PER_CHIP = 16e9          # bytes
+VPU_FLOPS = 3.9e12           # f32 vector unit (ILA-off perf model)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"[-a-z]*\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_RE2 = re.compile(r"replica_groups=\{([^}]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE2.search(line)
+    if m:
+        first = m.group(1).split("}")[0].split(",")
+        return max(len([x for x in first if x.strip() != ""]), 1)
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0                      # per device
+    by_kind: dict = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    """Per-device wire bytes using ring-algorithm cost factors:
+      all-reduce S      -> 2*S*(g-1)/g
+      all-gather S_full -> S_full*(g-1)/g
+      reduce-scatter S_in (result is the scattered shard; wire cost uses the
+                       full input = result * g) -> result*(g-1)
+      all-to-all S      -> S*(g-1)/g
+      collective-permute S -> S
+    """
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        if "start" in line.split(kind)[1][:8]:   # avoid double-count of -done
+            pass
+        size = _shape_bytes(shape_str)
+        g = _group_size(line, n_devices)
+        if g <= 1:
+            continue
+        if kind == "all-reduce":
+            wire = 2 * size * (g - 1) / g
+        elif kind == "all-gather":
+            wire = size * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = size * (g - 1)
+        elif kind == "all-to-all":
+            wire = size * (g - 1) / g
+        else:                                    # collective-permute
+            wire = size
+        st.wire_bytes += wire
+        k = st.by_kind.setdefault(kind, {"bytes": 0.0, "count": 0})
+        k["bytes"] += wire
+        k["count"] += 1
+        st.count += 1
+    return st
+
+
+# HLO text lists both `op-start` and `op-done`; only count `-start` (or the
+# bare op). We deduplicate by skipping lines whose op name ends in `-done`.
+def _strip_done(hlo_text: str) -> str:
+    return "\n".join(l for l in hlo_text.splitlines()
+                     if "-done" not in l.split("=")[0])
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_dev: float          # while-corrected (perf.hlo_cost)
+    bytes_per_dev: float          # while-corrected HBM estimate
+    wire_bytes_per_dev: float     # while-corrected collective wire bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float           # MODEL_FLOPS / (flops_per_dev * chips)
+    mem_per_dev_bytes: float
+    fits: bool
+    collectives: dict
+    xla_flops_raw: float          # cost_analysis() as reported (body-once)
+    xla_bytes_raw: float
+    n_while: int
+    max_trip: float
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, *, n_devices: int, model_flops_global: float,
+            peak=PEAK_FLOPS, hbm=HBM_BW, link=LINK_BW) -> Roofline:
+    from repro.perf import hlo_cost as H
+    ca = compiled.cost_analysis()
+    xla_flops = float(ca.get("flops", 0.0))
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+    cost = H.analyze_text(compiled.as_text(), n_devices)
+
+    compute_s = cost.flops / peak
+    memory_s = cost.hbm_bytes / hbm
+    collective_s = cost.wire_bytes / link
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    ma = compiled.memory_analysis()
+    mem = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+           + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+
+    hlo_global = cost.flops * n_devices
+    ratio = model_flops_global / hlo_global if hlo_global else 0.0
+    return Roofline(
+        flops_per_dev=cost.flops, bytes_per_dev=cost.hbm_bytes,
+        wire_bytes_per_dev=cost.wire_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops_global,
+        useful_ratio=ratio, mem_per_dev_bytes=float(mem),
+        fits=mem < HBM_PER_CHIP, collectives=cost.collectives,
+        xla_flops_raw=xla_flops, xla_bytes_raw=xla_bytes,
+        n_while=cost.n_while, max_trip=cost.max_trip)
+
+
+def model_flops(cfg, shape, n_active_params: int) -> float:
+    """6*N*D for training, 2*N*D for inference (attention flops excluded —
+    the useful_ratio is a utilization sanity metric, not an exact identity)."""
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train" else
+                                   (shape.seq_len if shape.kind == "prefill" else 1))
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active_params * tokens

@@ -1,0 +1,85 @@
+"""Fault tolerance + elasticity for the training loop.
+
+* ``resilient_train_loop`` — checkpoint/restart: periodic async checkpoints,
+  resume from the latest committed step, deterministic data replay (the
+  pipeline is seekable so a restart consumes exactly the remaining batches).
+  Optional failure injection for tests (process-level kill simulation).
+* ``elastic_restore`` — restore a checkpoint onto a *different* mesh: leaves
+  are host arrays; re-sharding happens at device_put with the new shardings
+  (elastic scale-up/down between jobs).
+* ``Heartbeat`` — wall-clock watchdog: at real scale this is the hook that
+  detects stalled steps (straggler / dead host) and triggers job restart; here
+  it powers the straggler-mitigation test.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class Heartbeat:
+    timeout_s: float = 300.0
+    last_beat: float = dataclasses.field(default_factory=time.time)
+    missed: int = 0
+
+    def beat(self):
+        now = time.time()
+        if now - self.last_beat > self.timeout_s:
+            self.missed += 1
+        self.last_beat = now
+
+    @property
+    def healthy(self) -> bool:
+        return time.time() - self.last_beat <= self.timeout_s
+
+
+def resilient_train_loop(train_step: Callable, init_state: Any, pipeline,
+                         *, steps: int, ckpt: Checkpointer,
+                         ckpt_every: int = 10, async_ckpt: bool = True,
+                         fail_at_step: int | None = None,
+                         to_batch=None) -> tuple[Any, list[dict], int]:
+    """Runs [resume_step, steps). Returns (state, metrics_log, start_step).
+
+    On entry, resumes from the latest committed checkpoint if present —
+    calling this again after a crash continues where the last commit left off.
+    ``fail_at_step`` raises InjectedFailure AFTER that step's optimizer update
+    but BEFORE its checkpoint would commit (the nastiest crash point).
+    """
+    start_step = 0
+    state = init_state
+    latest = ckpt.latest_step()
+    if latest is not None:
+        state, extra = ckpt.restore(init_state)
+        start_step = int(extra.get("next_step", latest + 1))
+
+    log: list[dict] = []
+    for step in range(start_step, steps):
+        batch = pipeline.batch_at(step)
+        if to_batch is not None:
+            batch = to_batch(batch)
+        state, metrics = train_step(state, batch)
+        log.append({"step": step,
+                    **{k: float(v) for k, v in metrics.items()}})
+        if fail_at_step is not None and step == fail_at_step:
+            raise InjectedFailure(f"injected failure at step {step}")
+        if (step + 1) % ckpt_every == 0 or step == steps - 1:
+            ckpt.save(step, state, blocking=not async_ckpt,
+                      extra={"next_step": step + 1})
+    ckpt.wait()
+    return state, log, start_step
+
+
+def elastic_restore(ckpt: Checkpointer, template: Any, shardings: Any,
+                    step: int | None = None):
+    """Restore onto (possibly different) mesh shardings."""
+    return ckpt.restore(template, step=step, shardings=shardings)

@@ -1,0 +1,177 @@
+"""Serving engine: continuous batching over a slot cache with jitted
+prefill (bucketed lengths) and a single fixed-shape decode step — the vLLM
+role in the paper's stack, adapted to TPU serving idioms (DESIGN.md §2).
+
+The decode step always runs the full slot batch; empty slots are masked by
+seq_lens == 0 and a live-mask on sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import LM
+from repro.models import layers as L
+from repro.serving import kv_cache as KV
+from repro.serving.sampler import SamplingParams, sample
+from repro.serving.scheduler import (Active, Finished, Request, Scheduler,
+                                     bucket_len)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    tokens_generated: int = 0
+    prefill_tokens: int = 0
+    steps: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def decode_throughput(self) -> float:
+        return self.tokens_generated / self.wall_s if self.wall_s else 0.0
+
+
+class Engine:
+    def __init__(self, model: LM, params, *, batch_slots: int = 8,
+                 max_len: int = 512, kernels: L.KernelConfig = L.DEFAULT_KERNELS,
+                 eos_id: int = 1, cache_dtype=jnp.float32, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.kernels = kernels
+        self.eos_id = eos_id
+        self.slots = KV.SlotCache(model, batch_slots, max_len, dtype=cache_dtype)
+        self.sched = Scheduler()
+        self.rng = jax.random.key(seed)
+        self.stats = EngineStats()
+        self._next_rid = 0
+
+        self._decode = jax.jit(
+            functools.partial(self._decode_impl, self.model, self.kernels))
+        self._prefill = jax.jit(
+            functools.partial(self._prefill_impl, self.model, self.kernels))
+
+    # ------------------------------------------------------------ jitted fns
+    @staticmethod
+    def _decode_impl(model, kernels, params, tokens, cache, seq_lens):
+        logits, cache, seq_lens = model.decode_step(
+            params, tokens, cache, seq_lens, kernels=kernels)
+        return logits, cache, seq_lens
+
+    @staticmethod
+    def _prefill_impl(model, kernels, params, tokens, length, cache, seq_lens):
+        # tokens right-padded to a bucket; `length` is the true prompt length.
+        lengths = jnp.full((tokens.shape[0],), length, jnp.int32)
+        logits, cache, seq_lens = model.prefill(
+            params, {"tokens": tokens}, cache, seq_lens, kernels=kernels,
+            true_lengths=lengths)   # index within the text block
+        return logits, cache, seq_lens - (tokens.shape[1] - length)
+
+    # -------------------------------------------------------------- lifecycle
+    def submit(self, tokens: list[int], max_new_tokens: int = 32,
+               sampling: SamplingParams = SamplingParams(greedy=True)) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.sched.submit(Request(rid=rid, tokens=list(tokens),
+                                  max_new_tokens=max_new_tokens,
+                                  sampling=sampling, arrival=time.time()))
+        return rid
+
+    def _admit(self, finished: list[Finished]):
+        for req in self.sched.admit(self.slots.num_free):
+            slot = self.slots.alloc()
+            assert slot is not None
+            a = self.sched.activate(req, slot)
+            # bucketed prefill on the slot's cache slice. Recurrent state
+            # (SSM) and ring caches (SWA) are polluted by padded tokens ->
+            # exact-length prefill for those families (one compile per length)
+            cfg = self.model.cfg
+            paddable = cfg.family not in ("ssm", "hybrid") and not cfg.sliding_window
+            blen = bucket_len(len(req.tokens)) if paddable else len(req.tokens)
+            toks = np.zeros((1, blen), np.int32)
+            toks[0, :len(req.tokens)] = req.tokens
+            sub_cache = jax.tree_util.tree_map(
+                lambda x: x[:, slot:slot + 1] if x.ndim >= 2 else x,
+                self.slots.cache)
+            sub_lens = jnp.zeros((1,), jnp.int32)
+            logits, sub_cache, sub_lens = self._prefill(
+                self.params, jnp.asarray(toks), len(req.tokens), sub_cache,
+                sub_lens)
+            # prefill wrote positions [0, blen); real length excludes padding
+            self.slots.cache = jax.tree_util.tree_map(
+                lambda full, sub: full.at[:, slot:slot + 1].set(sub)
+                if full.ndim >= 2 else sub,
+                self.slots.cache, sub_cache)
+            self.slots.seq_lens = self.slots.seq_lens.at[slot].set(
+                int(sub_lens[0]))
+            self.stats.prefill_tokens += len(req.tokens)
+            # sample the first generated token from the prefill logits
+            self.rng, k = jax.random.split(self.rng)
+            tok = int(sample(logits, k, req.sampling)[0])
+            a.t_first_token = time.time()
+            a.output.append(tok)
+            if tok == self.eos_id or len(a.output) >= req.max_new_tokens:
+                self._finish(slot, finished)
+
+    def _finish(self, slot: int, finished: list[Finished]):
+        a = self.sched.retire(slot)
+        self.slots.free(slot)
+        finished.append(Finished(
+            rid=a.req.rid, prompt_len=len(a.req.tokens), output=a.output,
+            arrival=a.req.arrival, t_first_token=a.t_first_token,
+            t_done=time.time()))
+
+    def step(self) -> list[Finished]:
+        """One engine iteration: admissions + one batched decode step."""
+        finished: list[Finished] = []
+        self._admit(finished)
+        if not self.sched.active:
+            return finished
+        # batched decode over every slot (empty slots masked via live set)
+        tokens = np.zeros((self.slots.batch_slots, 1), np.int32)
+        for slot, a in self.sched.active.items():
+            tokens[slot, 0] = a.output[-1] if a.output else a.req.tokens[-1]
+        logits, self.slots.cache, self.slots.seq_lens = self._decode(
+            self.params, jnp.asarray(tokens), self.slots.cache,
+            self.slots.seq_lens)
+        # non-live slots advanced seq_lens too; reset them
+        live = sorted(self.sched.active)
+        dead = [s for s in range(self.slots.batch_slots) if s not in live]
+        if dead:
+            self.slots.seq_lens = self.slots.seq_lens.at[jnp.asarray(dead)].set(0)
+        self.rng, k = jax.random.split(self.rng)
+        # per-request sampling params can differ; group greedy vs sampled
+        toks = {}
+        greedy_ids = [s for s in live if self.sched.active[s].req.sampling.greedy]
+        other = [s for s in live if s not in greedy_ids]
+        if greedy_ids:
+            g = jnp.argmax(logits[jnp.asarray(greedy_ids)], axis=-1)
+            for i, s in enumerate(greedy_ids):
+                toks[s] = int(g[i])
+        for s in other:
+            self.rng, k2 = jax.random.split(self.rng)
+            toks[s] = int(sample(logits[s:s + 1], k2,
+                                 self.sched.active[s].req.sampling)[0])
+        self.stats.tokens_generated += len(live)
+        self.stats.steps += 1
+        for s in live:
+            a = self.sched.active[s]
+            a.output.append(toks[s])
+            if toks[s] == self.eos_id or len(a.output) >= a.req.max_new_tokens:
+                self._finish(s, finished)
+        return finished
+
+    def run(self, *, max_steps: int = 10_000) -> list[Finished]:
+        """Drain the queue; returns finished requests with latency stats."""
+        t0 = time.time()
+        out: list[Finished] = []
+        steps = 0
+        while not self.sched.idle and steps < max_steps:
+            out.extend(self.step())
+            steps += 1
+        self.stats.wall_s += time.time() - t0
+        return out

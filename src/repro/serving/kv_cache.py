@@ -1,0 +1,155 @@
+"""Serving cache managers.
+
+Two layouts (DESIGN.md §2 — hardware adaptation of vLLM's PagedAttention):
+
+* ``SlotCache`` — TPU path: the model's native slot-based contiguous cache
+  (fixed max_len per decode slot). Slot allocation/free is O(1); the jitted
+  decode step is shape-stable. This is what JetStream-style TPU serving does
+  instead of paging.
+
+* ``PagedCache`` — CPU-engine option faithful to the paper's vLLM substrate:
+  block tables mapping logical token blocks to a shared physical page pool,
+  with copy-free sharing of common prefixes and page-level free lists.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SlotCache:
+    """Fixed-slot cache wrapper around the model's init_cache tree."""
+
+    def __init__(self, model, batch_slots: int, max_len: int,
+                 dtype=jnp.bfloat16):
+        self.model = model
+        self.batch_slots = batch_slots
+        self.max_len = max_len
+        self.cache = model.init_cache(batch_slots, max_len, dtype=dtype)
+        self.seq_lens = jnp.zeros((batch_slots,), jnp.int32)
+        self._free = list(range(batch_slots))[::-1]
+        self._live: set[int] = set()
+
+    def alloc(self) -> int | None:
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._live.add(slot)
+        return slot
+
+    def free(self, slot: int):
+        self._live.discard(slot)
+        self._free.append(slot)
+        # zero this slot's length so masks exclude stale entries
+        self.seq_lens = self.seq_lens.at[slot].set(0)
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+
+@dataclasses.dataclass
+class PagedCache:
+    """Block-table KV pool (numpy bookkeeping; pages are jnp arrays).
+
+    pages[layer]: (num_pages, page_size, Hkv, D) x2 (k, v)
+    block_table : seq_id -> list of page ids (+ ref counts for prefix sharing)
+    """
+    num_pages: int
+    page_size: int
+    n_layers: int
+    kv_heads: int
+    head_dim: int
+    dtype: object = jnp.bfloat16
+
+    def __post_init__(self):
+        shape = (self.n_layers, self.num_pages, self.page_size,
+                 self.kv_heads, self.head_dim)
+        self.k_pages = jnp.zeros(shape, self.dtype)
+        self.v_pages = jnp.zeros(shape, self.dtype)
+        self.free_list = list(range(self.num_pages))[::-1]
+        self.tables: dict[int, list[int]] = {}
+        self.lengths: dict[int, int] = {}
+        self.refcount = np.zeros(self.num_pages, np.int32)
+
+    # ------------------------------------------------------------ bookkeeping
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def can_alloc(self, n_tokens: int) -> bool:
+        return len(self.free_list) >= self.pages_needed(n_tokens)
+
+    def alloc_seq(self, seq_id: int, n_tokens: int,
+                  share_from: int | None = None) -> bool:
+        """Allocate pages for a sequence; optionally share a common prefix
+        (copy-on-write refcounting, the PagedAttention trick)."""
+        pages: list[int] = []
+        shared = 0
+        if share_from is not None and share_from in self.tables:
+            src = self.tables[share_from]
+            shared = min(len(src), n_tokens // self.page_size)
+            for p in src[:shared]:
+                self.refcount[p] += 1
+                pages.append(p)
+        need = self.pages_needed(n_tokens) - shared
+        if len(self.free_list) < need:
+            for p in pages:
+                self.refcount[p] -= 1
+            return False
+        for _ in range(need):
+            p = self.free_list.pop()
+            self.refcount[p] += 1
+            pages.append(p)
+        self.tables[seq_id] = pages
+        self.lengths[seq_id] = n_tokens
+        return True
+
+    def extend_seq(self, seq_id: int, n_new: int = 1) -> bool:
+        length = self.lengths[seq_id] + n_new
+        need = self.pages_needed(length) - len(self.tables[seq_id])
+        if need > 0:
+            if len(self.free_list) < need:
+                return False
+            for _ in range(need):
+                p = self.free_list.pop()
+                self.refcount[p] += 1
+                self.tables[seq_id].append(p)
+        self.lengths[seq_id] = length
+        return True
+
+    def free_seq(self, seq_id: int):
+        for p in self.tables.pop(seq_id, []):
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self.free_list.append(p)
+        self.lengths.pop(seq_id, None)
+
+    @property
+    def utilization(self) -> float:
+        return 1.0 - len(self.free_list) / self.num_pages
+
+    # -------------------------------------------------------------- data path
+    def write_tokens(self, seq_id: int, layer: int, start: int,
+                     k: jnp.ndarray, v: jnp.ndarray):
+        """k, v: (n, Hkv, D) written at logical positions [start, start+n)."""
+        table = self.tables[seq_id]
+        n = k.shape[0]
+        for i in range(n):
+            pos = start + i
+            page = table[pos // self.page_size]
+            off = pos % self.page_size
+            self.k_pages = self.k_pages.at[layer, page, off].set(
+                k[i].astype(self.dtype))
+            self.v_pages = self.v_pages.at[layer, page, off].set(
+                v[i].astype(self.dtype))
+
+    def gather_kv(self, seq_id: int, layer: int):
+        """Returns (k, v): (len, Hkv, D) gathered via the block table."""
+        table = jnp.asarray(self.tables[seq_id], jnp.int32)
+        length = self.lengths[seq_id]
+        k = self.k_pages[layer, table].reshape(-1, self.kv_heads, self.head_dim)
+        v = self.v_pages[layer, table].reshape(-1, self.kv_heads, self.head_dim)
+        return k[:length], v[:length]

@@ -1,0 +1,34 @@
+"""Token samplers: greedy / temperature / top-k / top-p, batched and jittable."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 1.0
+    top_k: int = 0              # 0 = off
+    top_p: float = 1.0          # 1.0 = off
+    greedy: bool = False
+
+
+def sample(logits: jnp.ndarray, rng, params: SamplingParams) -> jnp.ndarray:
+    """logits: (B, V) -> token ids (B,)."""
+    if params.greedy or params.temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / jnp.maximum(params.temperature, 1e-6)
+    if params.top_k:
+        kth = jnp.sort(logits, axis=-1)[:, -params.top_k][:, None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if params.top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest set with cumulative prob >= top_p
+        cutoff_idx = jnp.sum(cum < params.top_p, axis=-1)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None], axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,85 @@
+"""Continuous-batching scheduler: FCFS admission into decode slots, bucketed
+prefill lengths (bounded jit recompiles), per-request latency accounting."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any
+
+from repro.serving.sampler import SamplingParams
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: list[int]
+    max_new_tokens: int = 32
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    arrival: float = 0.0
+
+
+@dataclasses.dataclass
+class Finished:
+    rid: int
+    prompt_len: int
+    output: list[int]
+    arrival: float
+    t_first_token: float
+    t_done: float
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.arrival
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.arrival
+
+
+@dataclasses.dataclass
+class Active:
+    req: Request
+    slot: int
+    output: list[int] = dataclasses.field(default_factory=list)
+    t_first_token: float = 0.0
+
+
+PREFILL_BUCKETS = (32, 64, 128, 256, 512, 1024, 2048, 4096)
+
+
+def bucket_len(n: int) -> int:
+    for b in PREFILL_BUCKETS:
+        if n <= b:
+            return b
+    return -(-n // 4096) * 4096
+
+
+class Scheduler:
+    """Order + admission policy. The engine asks it what to do each step."""
+
+    def __init__(self):
+        self.waiting: deque[Request] = deque()
+        self.active: dict[int, Active] = {}
+
+    def submit(self, req: Request):
+        self.waiting.append(req)
+
+    def admit(self, num_free_slots: int) -> list[Request]:
+        out = []
+        while self.waiting and num_free_slots > 0:
+            out.append(self.waiting.popleft())
+            num_free_slots -= 1
+        return out
+
+    def activate(self, req: Request, slot: int) -> Active:
+        a = Active(req=req, slot=slot)
+        self.active[slot] = a
+        return a
+
+    def retire(self, slot: int) -> Active:
+        return self.active.pop(slot)
+
+    @property
+    def idle(self) -> bool:
+        return not self.waiting and not self.active

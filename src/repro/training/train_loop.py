@@ -1,0 +1,83 @@
+"""Training step builder: loss + grad + optimizer update (+ optional gradient
+accumulation), pure and jit/pjit-friendly. ``TrainState`` is the checkpoint
+unit."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import LM
+from repro.models import layers as L
+from repro.training import optimizer as O
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    rng: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state, self.rng), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_train_state(model: LM, opt_cfg: O.OptimizerConfig, rng) -> TrainState:
+    params = model.init(rng)
+    return TrainState(params=params,
+                      opt_state=O.init_opt_state(params, opt_cfg),
+                      rng=jax.random.key_data(jax.random.key(0)))
+
+
+def make_train_step(model: LM, opt_cfg: O.OptimizerConfig, *,
+                    kernels=L.DEFAULT_KERNELS,
+                    accum_steps: int = 1) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    With ``accum_steps > 1``, the batch's leading dim is split into
+    microbatches accumulated with a ``lax.scan`` (memory-bounded)."""
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch, kernels=kernels)
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(accum_steps, b // accum_steps, *x.shape[1:])
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def body(carry, mb):
+                acc_g, acc_l = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mb)
+                acc_g = jax.tree_util.tree_map(jnp.add, acc_g, g)
+                return (acc_g, acc_l + l), None
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (zero_g, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, grads)
+            loss = loss_sum / accum_steps
+            metrics = {"loss": loss, "aux": jnp.zeros(())}
+
+        new_params, new_opt, opt_metrics = O.apply_updates(
+            state.params, grads, state.opt_state, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        new_state = TrainState(params=new_params, opt_state=new_opt,
+                               rng=state.rng)
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,50 @@
+"""Data pipeline: determinism, host sharding, resume semantics, workload
+stream statistics."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import LMDataPipeline, sharegpt_stream
+
+
+def test_deterministic_and_resumable():
+    p1 = LMDataPipeline(vocab_size=1000, seq_len=16, global_batch=8, seed=3)
+    p2 = LMDataPipeline(vocab_size=1000, seq_len=16, global_batch=8, seed=3)
+    for s in (0, 5, 17):
+        np.testing.assert_array_equal(p1.batch_at(s)["tokens"],
+                                      p2.batch_at(s)["tokens"])
+    # different steps differ
+    assert not np.array_equal(p1.batch_at(0)["tokens"], p1.batch_at(1)["tokens"])
+
+
+def test_host_sharding_partitions_batch():
+    full = LMDataPipeline(vocab_size=500, seq_len=8, global_batch=8, seed=1)
+    h0 = LMDataPipeline(vocab_size=500, seq_len=8, global_batch=8, seed=1,
+                        host_index=0, host_count=2)
+    h1 = LMDataPipeline(vocab_size=500, seq_len=8, global_batch=8, seed=1,
+                        host_index=1, host_count=2)
+    assert h0.local_batch == h1.local_batch == 4
+    b0, b1 = h0.batch_at(3)["tokens"], h1.batch_at(3)["tokens"]
+    assert not np.array_equal(b0, b1)          # hosts draw distinct rows
+
+
+def test_labels_are_shifted_tokens():
+    p = LMDataPipeline(vocab_size=100, seq_len=12, global_batch=2, seed=0)
+    b = p.batch_at(0)
+    assert b["tokens"].shape == b["labels"].shape == (2, 12)
+    # next-token structure: labels[t] == tokens[t+1] comes from one stream
+    # (verified by regenerating the underlying sequence)
+    assert (b["labels"][:, :-1] == b["tokens"][:, 1:]).all()
+
+
+@given(st.integers(1, 50), st.integers(0, 5))
+@settings(max_examples=10, deadline=None)
+def test_sharegpt_stream_properties(n, seed):
+    reqs = sharegpt_stream(n, vocab_size=1000, seed=seed, mean_prompt=8,
+                           mean_output=4, max_prompt=32)
+    assert len(reqs) == n
+    arrivals = [r.arrival_s for r in reqs]
+    assert arrivals == sorted(arrivals)
+    for r in reqs:
+        assert 1 <= r.prompt_len <= 32 and len(r.prompt) == r.prompt_len
+        assert r.output_len >= 1
+        assert all(0 <= t < 1000 for t in r.prompt)

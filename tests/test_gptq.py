@@ -1,0 +1,98 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gptq, packing
+
+
+def _rand_w(k, n, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, size=(k, n)).astype(np.float32))
+
+
+def _rand_h(k, nsamples=512, seed=1):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, size=(nsamples, k)).astype(np.float32)
+    x[:, : k // 2] *= 4.0  # make some directions matter more
+    return jnp.asarray(2.0 * x.T @ x)
+
+
+def test_rtn_roundtrip_exact_grid():
+    # weights already on the quant grid -> RTN is exact
+    k, n, g = 64, 16, 32
+    rng = np.random.default_rng(0)
+    scales = rng.uniform(0.5, 2.0, size=(k // g, n)).astype(np.float32)
+    zeros = rng.integers(0, 16, size=(k // g, n))
+    q = rng.integers(0, 16, size=(k, n))
+    # make every (group, column) span the full grid so min/max recovery is exact
+    q.reshape(k // g, g, n)[:, 0, :] = 0
+    q.reshape(k // g, g, n)[:, 1, :] = 15
+    w = ((q.reshape(k // g, g, n) - zeros[:, None]) * scales[:, None]).reshape(k, n)
+    ql = gptq.gptq_quantize(jnp.asarray(w, jnp.float32), None,
+                            gptq.GPTQConfig(group_size=g))
+    np.testing.assert_allclose(np.asarray(gptq.dequantize(ql)), w, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("group_size", [32, 64, -1])
+@pytest.mark.parametrize("act_order", [False, True])
+def test_gptq_beats_or_matches_reconstruction(group_size, act_order):
+    k, n = 128, 64
+    w = _rand_w(k, n)
+    h = _rand_h(k)
+    cfg = gptq.GPTQConfig(group_size=group_size, act_order=act_order)
+    ql = gptq.gptq_quantize(w, h, cfg)
+    err = float(gptq.quantization_error(w, ql, h))
+    # hessian-weighted relative error must be small for 4 bits
+    assert err < 0.05, err
+    # and GPTQ should beat plain RTN on the hessian-weighted metric
+    q_rtn, s_rtn, z_rtn = gptq.quantize_rtn(w, cfg)
+    ql_rtn = gptq.QuantizedLinear(
+        qweight=packing.pack_int4_rows(q_rtn), scales=s_rtn,
+        qzeros=packing.pack_int4_cols(z_rtn.astype(jnp.int8)), perm=None,
+        bias=None, shape=(k, n), group_size=group_size if group_size > 0 else k)
+    err_rtn = float(gptq.quantization_error(w, ql_rtn, h))
+    assert err <= err_rtn * 1.05, (err, err_rtn)
+
+
+def test_act_order_permutation_consistency():
+    k, n = 64, 32
+    w = _rand_w(k, n, seed=3)
+    h = _rand_h(k, seed=4)
+    ql = gptq.gptq_quantize(w, h, gptq.GPTQConfig(group_size=32, act_order=True))
+    assert ql.perm is not None
+    # perm must be a permutation of arange(k)
+    np.testing.assert_array_equal(np.sort(np.asarray(ql.perm)), np.arange(k))
+    # dequantize returns original-order rows: matmul against x must approximate x@w
+    x = _rand_w(8, k, seed=5).T[:8, :] if False else _rand_w(8, k, seed=5)
+    y_ref = x @ w
+    y_q = x @ gptq.dequantize(ql)
+    rel = float(jnp.linalg.norm(y_q - y_ref) / jnp.linalg.norm(y_ref))
+    assert rel < 0.1, rel
+
+
+def test_hessian_accumulation_shape_and_psd():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 16, 32)), jnp.float32)
+    h = gptq.accumulate_hessian(None, x)
+    h = gptq.accumulate_hessian(h, x)
+    assert h.shape == (32, 32)
+    eig = np.linalg.eigvalsh(np.asarray(h))
+    assert eig.min() >= -1e-3
+
+
+def test_quantized_linear_is_pytree():
+    w = _rand_w(32, 16)
+    ql = gptq.gptq_quantize(w, None, gptq.GPTQConfig(group_size=16))
+    leaves = jax.tree_util.tree_leaves(ql)
+    assert len(leaves) == 3  # qweight, scales, qzeros (perm/bias None)
+    ql2 = jax.tree_util.tree_map(lambda a: a, ql)
+    assert ql2.shape == ql.shape
+
+
+def test_dead_columns_handled():
+    k, n = 32, 16
+    w = _rand_w(k, n)
+    h = np.array(_rand_h(k))  # writable copy
+    h[0, :] = 0; h[:, 0] = 0  # dead input feature
+    ql = gptq.gptq_quantize(w, jnp.asarray(h), gptq.GPTQConfig(group_size=16))
+    assert np.isfinite(np.asarray(gptq.dequantize(ql))).all()

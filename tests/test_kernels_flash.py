@@ -1,0 +1,47 @@
+"""Flash attention Pallas kernel vs the jnp reference oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import flash_attention_ref
+
+
+def _rand(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape)
+                       .astype(np.float32)) * 0.5
+
+
+@pytest.mark.parametrize("b,s,h,d,bq,bk", [
+    (1, 128, 2, 32, 64, 64),
+    (2, 256, 4, 64, 128, 128),
+    (1, 64, 1, 16, 64, 32),     # single q block, several k blocks
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_ref(b, s, h, d, bq, bk, causal):
+    q, k, v = (_rand((b, s, h, d), i) for i in range(3))
+    out = flash_attention(q, k, v, causal=causal, bq=bq, bk=bk)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_bf16():
+    q, k, v = (_rand((1, 128, 2, 32), i).astype(jnp.bfloat16) for i in range(3))
+    out = flash_attention(q, k, v, bq=64, bk=64)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=3e-2, atol=3e-2)
+
+
+def test_flash_long_kv_decode_like():
+    # Sq << Sk (chunked prefill tail), non-causal to exercise full K span
+    q = _rand((1, 64, 2, 32), 5)
+    k = _rand((1, 512, 2, 32), 6)
+    v = _rand((1, 512, 2, 32), 7)
+    out = flash_attention(q, k, v, causal=False, bq=64, bk=128)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)

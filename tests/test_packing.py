@@ -1,0 +1,45 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+
+
+@given(st.integers(1, 6), st.integers(1, 40), st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pack_unpack_rows_roundtrip(kw, n, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(0, 16, size=(kw * 8, n), dtype=np.int32)
+    packed = packing.pack_int4_rows(jnp.asarray(w))
+    assert packed.shape == (kw, n) and packed.dtype == jnp.int32
+    out = packing.unpack_int4_rows(packed)
+    np.testing.assert_array_equal(np.asarray(out), w.astype(np.int8))
+
+
+@given(st.integers(1, 8), st.integers(1, 5), st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pack_unpack_cols_roundtrip(g, nw, seed):
+    rng = np.random.default_rng(seed)
+    z = rng.integers(0, 16, size=(g, nw * 8), dtype=np.int32)
+    packed = packing.pack_int4_cols(jnp.asarray(z))
+    assert packed.shape == (g, nw)
+    out = packing.unpack_int4_cols(packed)
+    np.testing.assert_array_equal(np.asarray(out), z.astype(np.int8))
+
+
+def test_numpy_twins_match_jnp():
+    rng = np.random.default_rng(0)
+    w = rng.integers(0, 16, size=(64, 24), dtype=np.int32)
+    np.testing.assert_array_equal(
+        packing.np_pack_int4_rows(w), np.asarray(packing.pack_int4_rows(jnp.asarray(w))))
+    packed = packing.np_pack_int4_rows(w)
+    np.testing.assert_array_equal(
+        packing.np_unpack_int4_rows(packed), np.asarray(packing.unpack_int4_rows(jnp.asarray(packed))))
+
+
+def test_nibble_order_lsb_first():
+    # row 0 in least significant nibble (AutoGPTQ convention)
+    w = jnp.asarray(np.arange(8, dtype=np.int32)[:, None])  # values 0..7 in col 0
+    packed = packing.pack_int4_rows(w)
+    assert int(packed[0, 0]) == 0x76543210

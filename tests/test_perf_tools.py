@@ -1,0 +1,112 @@
+"""perf substrate tests: while-aware HLO cost parser (exactness on known
+programs), roofline term assembly, collective wire-cost formulas, analytic
+memory model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.perf import hlo_cost as H
+from repro.perf import roofline as R
+
+
+def test_scan_flops_exact():
+    def scanned(ws, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return jnp.sum(y)
+
+    ws = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, 256), jnp.float32)
+    c = jax.jit(scanned).lower(ws, x).compile()
+    cost = H.analyze_text(c.as_text(), 1)
+    assert cost.flops == 8 * 2 * 32 * 256 * 256
+    assert cost.n_while == 1 and cost.max_trip == 8
+
+
+def test_nested_scan_multiplies():
+    def inner(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=3)
+        return y
+
+    def outer(ws, x):
+        def body(c, w):
+            return inner(c, w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return jnp.sum(y)
+
+    ws = jax.ShapeDtypeStruct((4, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    c = jax.jit(outer).lower(ws, x).compile()
+    cost = H.analyze_text(c.as_text(), 1)
+    assert cost.flops == 4 * 3 * 2 * 8 * 64 * 64
+
+
+def test_batched_dot_flops():
+    def f(a, b):
+        return jnp.einsum("bik,bkj->bij", a, b)
+    a = jax.ShapeDtypeStruct((4, 32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 64, 16), jnp.float32)
+    c = jax.jit(f).lower(a, b).compile()
+    assert H.analyze_text(c.as_text(), 1).flops == 2 * 4 * 32 * 64 * 16
+
+
+def test_shape_bytes():
+    assert H.shape_bytes("f32[4,8]") == 128
+    assert H.shape_bytes("bf16[10]{0}") == 20
+    assert H.shape_bytes("(f32[2,2], s32[3])") == 28
+    assert H.shape_bytes("pred[5]") == 5
+
+
+def test_wire_cost_formulas():
+    op = H.Op("x", "f32[1000]", "all-reduce", ["a"],
+              "= f32[1000] all-reduce(%a), replica_groups=[4,8]<=[32]")
+    assert H._wire_bytes(op, 32) == pytest.approx(2 * 4000 * 7 / 8)
+    op2 = H.Op("x", "f32[1000]", "all-gather", ["a"],
+               "= f32[1000] all-gather(%a), replica_groups=[4,8]<=[32]")
+    assert H._wire_bytes(op2, 32) == pytest.approx(4000 * 7 / 8)
+
+
+def test_dus_cache_write_not_charged_full_buffer():
+    """In-place cache update inside scan must charge ~update bytes, not the
+    full cache (decode memory-term correctness)."""
+    def step(cache, new):
+        def body(c, n):
+            c = jax.lax.dynamic_update_slice(c, n[None, None], (0, 5, 0))
+            return c, jnp.sum(n)
+        c2, s = jax.lax.scan(body, cache, new)
+        return c2, s
+
+    cache = jax.ShapeDtypeStruct((1, 1024, 64), jnp.float32)
+    new = jax.ShapeDtypeStruct((4, 64), jnp.float32)
+    c = jax.jit(step).lower(cache, new).compile()
+    cost = H.analyze_text(c.as_text(), 1)
+    full = 4 * (1024 * 64 * 4)          # 4 iterations x full cache
+    assert cost.hbm_bytes < full, (cost.hbm_bytes, full)
+
+
+def test_roofline_dominant_and_ratio():
+    def f(a, b):
+        return (a @ b).sum()
+    a = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    c = jax.jit(f).lower(a, b).compile()
+    roof = R.analyze(c, n_devices=1, model_flops_global=2 * 512**3)
+    assert roof.dominant in ("compute", "memory")
+    assert 0.5 < roof.useful_ratio <= 1.5
+    assert roof.flops_per_dev == pytest.approx(2 * 512**3, rel=0.01)
+
+
+def test_memory_model_sharded_bytes():
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_mesh
+    from repro.perf.memory_model import sharded_state_bytes
+    if len(jax.devices()) < 1:
+        pytest.skip("no devices")
+    mesh = make_mesh((1,), ("model",))
+    tree = {"w": jax.ShapeDtypeStruct((64, 32), jnp.float32)}
+    sh = {"w": NamedSharding(mesh, P(None, "model"))}
+    assert sharded_state_bytes(tree, sh, mesh) == 64 * 32 * 4

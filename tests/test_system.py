@@ -1,0 +1,106 @@
+"""End-to-end behaviour tests: the full pipeline the paper describes —
+train -> calibrate -> GPTQ-quantize -> serve with the optimized kernels —
+plus cross-cutting invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, applicable, get_config, smoke_config
+from repro.core.gptq import GPTQConfig
+from repro.core.opt_strategies import OPT4GPTQ
+from repro.core.quantize_model import dequantize_tree, quantize_params
+from repro.data.pipeline import LMDataPipeline
+from repro.models import build_model
+from repro.models import layers as L
+from repro.serving.engine import Engine
+from repro.training import optimizer as O
+from repro.training.train_loop import init_train_state, make_train_step
+
+
+def test_full_pipeline_train_quantize_serve():
+    """The paper's deployment story end to end on a reduced model."""
+    cfg = dataclasses.replace(smoke_config("qwen3_4b"), scan_layers=False)
+    model = build_model(cfg)
+    opt = O.OptimizerConfig(learning_rate=2e-3, warmup_steps=2, total_steps=30)
+    state = init_train_state(model, opt, jax.random.key(0))
+    step = jax.jit(make_train_step(model, opt))
+    pipe = LMDataPipeline(vocab_size=cfg.vocab_size, seq_len=24, global_batch=4)
+    first = last = None
+    for s in range(30):
+        state, m = step(state, {k: jnp.asarray(v) for k, v in pipe.batch_at(s).items()})
+        first = first if first is not None else float(m["loss"])
+        last = float(m["loss"])
+    assert last < first
+
+    # calibrate + quantize
+    with L.capture_hessians() as ctx:
+        b = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+        model.apply(state.params, b, mode="train")
+    assert len(ctx.hessians) >= cfg.num_layers * 4   # per-layer projections seen
+    qparams = quantize_params(state.params, dict(ctx.hessians),
+                              GPTQConfig(group_size=32))
+
+    # quantized model stays close to fp in function space
+    logits_fp, _, _ = model.apply(state.params, b, mode="train")
+    logits_q, _, _ = model.apply(qparams, b, mode="train")
+    agree = float((logits_q.argmax(-1) == logits_fp.argmax(-1)).mean())
+    assert agree > 0.9, agree
+
+    # serve it with the paper's full optimization strategy (Pallas kernels)
+    kern = L.KernelConfig(strategy=OPT4GPTQ, use_pallas=True,
+                          block_sizes=(8, 64, 64))
+    eng = Engine(model, qparams, batch_slots=2, max_len=48, kernels=kern,
+                 eos_id=-1)
+    eng.submit([5, 6, 7, 8], max_new_tokens=4)
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].output) == 4
+
+
+def test_dequantize_tree_roundtrip_shapes():
+    cfg = smoke_config("grok1_314b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    q = quantize_params(params, None, GPTQConfig(group_size=32))
+    dq = dequantize_tree(q, jnp.float32)
+    for a, b in zip(jax.tree_util.tree_leaves(jax.eval_shape(lambda: params)),
+                    jax.tree_util.tree_leaves(jax.eval_shape(lambda: dq))):
+        assert a.shape == b.shape, (a.shape, b.shape)
+
+
+def test_applicability_matrix_counts():
+    """DESIGN.md §4: 31 runnable cells + 9 rule-skips per mesh."""
+    runnable = skipped = 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, why = applicable(cfg, shape)
+            runnable += ok
+            skipped += not ok
+            if not ok:
+                assert why
+    assert runnable == 31 and skipped == 9
+
+
+def test_quantization_compression_ratio():
+    """int4 + group-128 scales should compress projections ~7-8x vs fp32."""
+    cfg = smoke_config("codeqwen1p5_7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+
+    def proj_bytes(tree):
+        tot = 0
+        for path, leaf in jax.tree_util.tree_leaves_with_path(
+                tree, is_leaf=lambda x: hasattr(x, "qweight")):
+            if hasattr(leaf, "qweight"):
+                for a in (leaf.qweight, leaf.scales, leaf.qzeros):
+                    tot += a.size * a.dtype.itemsize
+            elif "group" in str(path) and getattr(leaf, "ndim", 0) >= 2:
+                tot += leaf.size * leaf.dtype.itemsize
+        return tot
+
+    q = quantize_params(params, None, GPTQConfig(group_size=32))
+    ratio = proj_bytes(params) / proj_bytes(q)
+    assert ratio > 4.5, ratio   # group=32 fp32 scales cost more; >=4.5x holds

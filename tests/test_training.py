@@ -1,0 +1,184 @@
+"""Training substrate: optimizer math, loss decrease, grad accumulation
+equivalence, checkpoint/restart (incl. kill-and-resume and torn-write
+rejection), elastic re-shard in a multi-device subprocess."""
+import json
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import smoke_config
+from repro.data.pipeline import LMDataPipeline
+from repro.models import build_model
+from repro.runtime.fault_tolerance import (InjectedFailure,
+                                           resilient_train_loop)
+from repro.training import optimizer as O
+from repro.training.train_loop import init_train_state, make_train_step
+
+
+def _setup(arch="qwen3_4b", lr=3e-3):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    opt_cfg = O.OptimizerConfig(learning_rate=lr, warmup_steps=2,
+                                total_steps=100)
+    state = init_train_state(model, opt_cfg, jax.random.key(0))
+    step = jax.jit(make_train_step(model, opt_cfg))
+    pipe = LMDataPipeline(vocab_size=cfg.vocab_size, seq_len=16,
+                          global_batch=4, seed=7)
+    return cfg, model, opt_cfg, state, step, pipe
+
+
+def _to_batch(b):
+    return {k: jnp.asarray(v) for k, v in b.items()}
+
+
+def test_loss_decreases():
+    cfg, model, opt_cfg, state, step, pipe = _setup()
+    losses = []
+    batch = _to_batch(pipe.batch_at(0))  # overfit one batch
+    for _ in range(12):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_lr_schedule_shape():
+    cfg = O.OptimizerConfig(learning_rate=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_ratio=0.1)
+    lrs = [float(O.lr_schedule(cfg, jnp.asarray(float(s)))) for s in [0, 5, 10, 55, 100]]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5 * lrs[2] / 1.0) < 0.3    # mid-warmup
+    assert lrs[2] == pytest.approx(1.0, rel=0.05)
+    assert lrs[4] == pytest.approx(0.1, rel=0.05)    # floor
+
+
+def test_grad_accum_matches_full_batch():
+    cfg, model, opt_cfg, state, _, pipe = _setup()
+    batch = _to_batch(pipe.batch_at(3))
+    s1 = jax.jit(make_train_step(model, opt_cfg, accum_steps=1))
+    s2 = jax.jit(make_train_step(model, opt_cfg, accum_steps=2))
+    st1, m1 = s1(state, batch)
+    st2, m2 = s2(state, batch)
+    # same data -> same mean loss and near-identical params after one update
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-4)
+    l1 = jax.tree_util.tree_leaves(st1.params)
+    l2 = jax.tree_util.tree_leaves(st2.params)
+    for a, b in zip(l1, l2):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-4)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg, model, opt_cfg, state, step, pipe = _setup()
+    ck = Checkpointer(tmp_path, keep=2)
+    state, _ = step(state, _to_batch(pipe.batch_at(0)))
+    ck.save(0, state, extra={"next_step": 1})
+    restored, extra = ck.restore(state)
+    assert extra["next_step"] == 1
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention(tmp_path):
+    cfg, model, opt_cfg, state, step, pipe = _setup()
+    ck = Checkpointer(tmp_path, keep=2)
+    for s in range(5):
+        ck.save(s, {"x": jnp.asarray([s])})
+    assert ck.all_steps() == [3, 4]
+
+
+def test_torn_checkpoint_rejected(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(3, {"x": jnp.arange(4)})
+    # simulate a crash mid-write of step 7: directory exists, no COMMIT marker
+    torn = pathlib.Path(tmp_path) / "step_7"
+    torn.mkdir()
+    (torn / "arr_0.npy").write_bytes(b"garbage")
+    assert ck.latest_step() == 3
+    restored, _ = ck.restore({"x": jnp.zeros(4, jnp.int32)})
+    np.testing.assert_array_equal(np.asarray(restored["x"]), np.arange(4))
+
+
+def test_kill_and_resume_training(tmp_path):
+    """Crash after step 12 (post-update, pre-commit) -> resume from step 9's
+    checkpoint -> final state must equal an uninterrupted run (deterministic
+    data replay makes this exact)."""
+    cfg, model, opt_cfg, state0, step, pipe = _setup()
+    total = 17
+
+    # uninterrupted reference
+    ref = state0
+    for s in range(total):
+        ref, _ = step(ref, _to_batch(pipe.batch_at(s)))
+
+    ck = Checkpointer(tmp_path / "ft", keep=3)
+    with pytest.raises(InjectedFailure):
+        resilient_train_loop(step, state0, pipe, steps=total, ckpt=ck,
+                             ckpt_every=5, async_ckpt=False, fail_at_step=12,
+                             to_batch=_to_batch)
+    assert ck.latest_step() == 9      # steps 0-9 committed at (step+1)%5==0
+    state, log, start = resilient_train_loop(
+        step, state0, pipe, steps=total, ckpt=ck, ckpt_every=5,
+        async_ckpt=False, to_batch=_to_batch)
+    assert start == 10                # resumed, not restarted
+    for a, b in zip(jax.tree_util.tree_leaves(ref.params),
+                    jax.tree_util.tree_leaves(state.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)
+
+
+def test_async_checkpoint_equivalent(tmp_path):
+    cfg, model, opt_cfg, state, step, pipe = _setup()
+    ck_sync = Checkpointer(tmp_path / "s")
+    ck_async = Checkpointer(tmp_path / "a")
+    state, _ = step(state, _to_batch(pipe.batch_at(0)))
+    ck_sync.save(0, state)
+    ck_async.save(0, state, blocking=False)
+    ck_async.wait()
+    r1, _ = ck_sync.restore(state)
+    r2, _ = ck_async.restore(state)
+    for a, b in zip(jax.tree_util.tree_leaves(r1), jax.tree_util.tree_leaves(r2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+ELASTIC_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, json
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.launch.mesh import make_mesh
+
+ckdir = sys.argv[1]
+# save on a (4, 2) mesh
+mesh_a = make_mesh((4, 2), ("data", "model"))
+w = jnp.arange(64 * 32, dtype=jnp.float32).reshape(64, 32)
+w_a = jax.device_put(w, NamedSharding(mesh_a, P("data", "model")))
+ck = Checkpointer(ckdir)
+ck.save(0, {"w": w_a})
+# restore on a (2, 4) mesh — elastic re-shard
+mesh_b = make_mesh((2, 4), ("data", "model"))
+sh = {"w": NamedSharding(mesh_b, P("data", "model"))}
+restored, _ = ck.restore({"w": w}, shardings=sh)
+assert restored["w"].sharding.num_devices == 8
+np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(w))
+print("ELASTIC_OK")
+"""
+
+
+def test_elastic_reshard_multidevice(tmp_path):
+    r = subprocess.run(
+        [sys.executable, "-c", ELASTIC_SCRIPT, str(tmp_path / "ck")],
+        capture_output=True, text=True, timeout=300,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root"},
+        cwd=str(pathlib.Path(__file__).resolve().parents[1]))
+    assert "ELASTIC_OK" in r.stdout, r.stdout + r.stderr
