@@ -1,46 +1,98 @@
 """Kernel microbench: per-strategy interpret-mode wall time (harness check)
 plus the modeled v5e bytes/time per strategy for the paper's canonical GEMM
-shapes (decode GEMV and prefill GEMM)."""
+shapes — and the decode fast lane (ISSUE 1): for the decode-GEMV shape every
+strategy is timed on the seed's fixed-block general-matmul path AND on the
+GEMV lane with autotuned blocks, so the speedup is tracked per PR.
+
+Emits CSV lines through benchmarks/run.py and writes the structured record
+to BENCH_kernels.json at the repo root (the perf trajectory for later PRs).
+"""
 from __future__ import annotations
 
-import time
+import json
+import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import gptq
+from repro.core import gptq, packing
 from repro.core.opt_strategies import STRATEGIES
 from repro.core.perf_model import gptq_matmul_cost
-from repro.kernels import ops
+from repro.kernels import autotune, ops
+from repro.kernels import gptq_matmul as _gm
 
 SHAPES = [
     ("decode_gemv", 8, 1024, 1024, 128),
     ("prefill_gemm", 128, 1024, 512, 128),
 ]
+SEED_BLOCKS = (8, 256, 256)       # the seed's fixed decode path
+REPS = 3
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         os.pardir, "BENCH_kernels.json")
+
+
+def _time(fn, reps=REPS):
+    """us per call, best-of-reps — same timer the autotuner selects with
+    (autotune._time_call), so benchmark numbers and tuning decisions agree."""
+    return autotune._time_call(fn, reps=reps) * 1e6
 
 
 def run():
     lines = []
+    records = []
     rng = np.random.default_rng(0)
     for name, m, k, n, g in SHAPES:
         w = jnp.asarray(rng.normal(0, 0.5, (k, n)).astype(np.float32))
         ql = gptq.gptq_quantize(w, None, gptq.GPTQConfig(group_size=g))
         x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        decode = name.startswith("decode")
         for s, strat in STRATEGIES.items():
             cost = gptq_matmul_cost(m, k, n, group_size=g, strategy=strat)
-            fn = lambda: ops.gptq_linear(ql, x, strategy=strat,
-                                         use_pallas=True,
-                                         block_sizes=(8, 256, 256))
-            fn()  # compile/warm
-            t0 = time.time()
-            reps = 3
-            for _ in range(reps):
-                jax.block_until_ready(fn())
-            us = (time.time() - t0) / reps * 1e6
-            lines.append(
-                f"kernel/{name}/{s},{us:.0f},"
-                f"model_us={cost.time_s * 1e6:.2f}|hbm_kb={cost.hbm_bytes / 1e3:.0f}")
+            rec = {"shape": name, "m": m, "k": k, "n": n, "group_size": g,
+                   "strategy": s, "model_us": cost.time_s * 1e6,
+                   "hbm_kb": cost.hbm_bytes / 1e3}
+            if decode:
+                # seed path: fixed blocks through the general tiled matmul
+                qw = (ql.qweight if strat.packed_loads
+                      else packing.unpack_int4_rows(ql.qweight, k))
+                bm, bn, bk = SEED_BLOCKS
+                us_seed = _time(lambda: _gm.gptq_matmul(
+                    x, qw, ql.scales, ql.qzeros, group_size=g, strategy=strat,
+                    bm=bm, bn=bn, bk=bk))
+                # fast lane: GEMV dispatch, fixed blocks vs autotuned blocks
+                us_fixed = _time(lambda: ops.gptq_linear(
+                    ql, x, strategy=strat, use_pallas=True,
+                    block_sizes=SEED_BLOCKS))
+                tuned = autotune.get_block_sizes(m, k, n, g, strat)
+                us_auto = _time(lambda: ops.gptq_linear(
+                    ql, x, strategy=strat, use_pallas=True,
+                    block_sizes="auto"))
+                rec.update(us_seed_matmul=us_seed, us_gemv_fixed=us_fixed,
+                           us_gemv_auto=us_auto, auto_blocks=list(tuned),
+                           speedup_vs_seed=us_seed / us_auto if us_auto else 0)
+                lines.append(
+                    f"kernel/{name}/{s},{us_auto:.0f},"
+                    f"seed_us={us_seed:.0f}|gemv_fixed_us={us_fixed:.0f}|"
+                    f"auto_blocks={'x'.join(map(str, tuned))}|"
+                    f"speedup={rec['speedup_vs_seed']:.2f}|"
+                    f"model_us={cost.time_s * 1e6:.2f}|"
+                    f"hbm_kb={cost.hbm_bytes / 1e3:.0f}")
+            else:
+                us = _time(lambda: ops.gptq_linear(
+                    ql, x, strategy=strat, use_pallas=True,
+                    block_sizes=SEED_BLOCKS))
+                rec["us"] = us
+                lines.append(
+                    f"kernel/{name}/{s},{us:.0f},"
+                    f"model_us={cost.time_s * 1e6:.2f}|"
+                    f"hbm_kb={cost.hbm_bytes / 1e3:.0f}")
+            records.append(rec)
+    try:
+        with open(JSON_PATH, "w") as f:
+            json.dump(records, f, indent=1)
+        lines.append(f"kernel/json,0,written={os.path.abspath(JSON_PATH)}")
+    except OSError as e:
+        lines.append(f"kernel/json,0,ERROR={e!r}")
     return lines
 
 

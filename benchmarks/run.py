@@ -3,16 +3,26 @@ Prints ``name,us_per_call,derived`` CSV lines.
 
   figs 2-3  : bench_paper_figs  (throughput/latency per model x strategy)
   tables1-2 : bench_accuracy    (ppl fp16 vs GPTQ vs RTN; strategy agreement)
-  kernels   : bench_kernels     (per-strategy micro costs)
+  kernels   : bench_kernels     (per-strategy micro costs + decode fast lane;
+                                 writes BENCH_kernels.json for the perf
+                                 trajectory across PRs)
   roofline  : roofline_table    (dry-run derived roofline per cell)
+
+``--sections kernels,roofline`` runs a subset (default: all).
 """
+import argparse
 import sys
 import traceback
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sections", default="all",
+                    help="comma-separated subset of "
+                         "kernels,paper_figs,accuracy,roofline (default all)")
+    args = ap.parse_args()
+
     print("name,us_per_call,derived")
-    sections = []
     from benchmarks import bench_kernels, bench_paper_figs, bench_accuracy, \
         roofline_table
     sections = [
@@ -21,6 +31,12 @@ def main() -> None:
         ("accuracy", bench_accuracy.run),
         ("roofline", roofline_table.run),
     ]
+    if args.sections != "all":
+        wanted = {s.strip() for s in args.sections.split(",")}
+        unknown = wanted - {name for name, _ in sections}
+        if unknown:
+            sys.exit(f"unknown sections: {sorted(unknown)}")
+        sections = [(n, f) for n, f in sections if n in wanted]
     failed = 0
     for name, fn in sections:
         try:

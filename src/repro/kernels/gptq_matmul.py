@@ -16,8 +16,10 @@ Strategy flags (core/opt_strategies.py) select the paper's ablation variants:
   (the compiler-generated-scalar-code analogue).
 
 Tiling: blocks are (8,128)-aligned; defaults bm=128, bn=256, bk=512 give a
-~0.33 MB working set (see DESIGN.md §6).  ``group_size`` must divide or be a
-multiple of bk.
+~0.33 MB working set (see DESIGN.md §6).  Requested block sizes are legalized
+for the actual shape (``resolve_block_sizes``: bk shrinks to divide K and
+align with the group size; N is zero-padded up to a multiple of bn) — a
+``ValueError`` is raised only for shapes the packed layout cannot serve.
 """
 from __future__ import annotations
 
@@ -155,6 +157,55 @@ def _scale_block(bk, group_size):
     return max(bk // group_size, 1)
 
 
+def resolve_block_sizes(m: int, k: int, n: int, group_size: int,
+                        bm: int, bn: int, bk: int) -> tuple[int, int, int]:
+    """Shrink requested blocks to legal sizes for this shape.
+
+    Legal means: bm/bn/bk multiples of 8 (packed rows come in 8-nibble words),
+    bk divides K and aligns with the quantization group (bk % g == 0 or
+    g % bk == 0).  N never constrains bn — the caller pads N up to a multiple
+    of bn (see ``pad_cols``).  Raises ``ValueError`` only when no legal K
+    block exists (K not servable by the packed layout).
+    """
+    g = group_size if group_size > 0 else k
+    if k % NIB != 0:
+        raise ValueError(
+            f"K={k} not divisible by {NIB}: unservable by int4 row packing "
+            f"(shape M={m}, K={k}, N={n}, group_size={group_size})")
+    bm = max(min(_round_up(bm, 8), _round_up(m, 8)), 8)
+    bn = max(min(_round_up(bn, 8), _round_up(n, 8)), 8)
+    bk_req = max(min(bk, k) // NIB * NIB, NIB)
+    bk = None
+    for cand in range(bk_req, 0, -NIB):
+        if k % cand == 0 and (cand % g == 0 or g % cand == 0):
+            bk = cand
+            break
+    if bk is None:
+        raise ValueError(
+            f"no legal K block for M={m}, K={k}, N={n}, "
+            f"group_size={group_size}: need a multiple of {NIB} that divides "
+            f"K and aligns with the group size")
+    return bm, bn, bk
+
+
+def pad_cols(qweight: jnp.ndarray, scales: jnp.ndarray, qzeros: jnp.ndarray,
+             n: int, bn: int):
+    """Zero-pad the N axis up to a multiple of bn so any (8,128)-aligned bn is
+    servable (e.g. N=1000 with bn=256 pads to 1024; output is sliced back).
+    Padded columns dequantize to (0 - 0) * 1 = 0 and never reach the caller."""
+    if n % NIB != 0:
+        raise ValueError(f"N={n} not divisible by {NIB}: unservable by int4 "
+                         f"column packing of qzeros")
+    n_pad = _round_up(n, bn)
+    if n_pad == n:
+        return qweight, scales, qzeros, n
+    dn = n_pad - n
+    qweight = jnp.pad(qweight, ((0, 0), (0, dn)))
+    scales = jnp.pad(scales, ((0, 0), (0, dn)), constant_values=1.0)
+    qzeros = jnp.pad(qzeros, ((0, 0), (0, dn // NIB)))
+    return qweight, scales, qzeros, n_pad
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("group_size", "strategy", "bm", "bn", "bk", "out_dtype",
@@ -170,20 +221,16 @@ def gptq_matmul(x: jnp.ndarray, qweight: jnp.ndarray, scales: jnp.ndarray,
     m, k = x.shape
     n = scales.shape[1]
     g = group_size if group_size > 0 else k
-    bm = min(bm, _round_up(m, 8))
-    bn = min(bn, n)
-    bk = min(bk, k)
-    if bk % g != 0 and g % bk != 0:
-        bk = g  # fall back: align block to the quantization group
-    assert k % bk == 0 and n % bn == 0, (m, k, n, bm, bn, bk)
+    bm, bn, bk = resolve_block_sizes(m, k, n, group_size, bm, bn, bk)
+    qweight, scales, qzeros, n_pad = pad_cols(qweight, scales, qzeros, n, bn)
     gk = _scale_block(bk, g)
 
     m_pad = _round_up(m, bm)
     if m_pad != m:
         x = jnp.pad(x, ((0, m_pad - m), (0, 0)))
-    nm, nn, nk = m_pad // bm, n // bn, k // bk
+    nm, nn, nk = m_pad // bm, n_pad // bn, k // bk
     out_dtype = out_dtype or x.dtype
-    out_shape = jax.ShapeDtypeStruct((m_pad, n), out_dtype)
+    out_shape = jax.ShapeDtypeStruct((m_pad, n_pad), out_dtype)
 
     if strategy.packed_loads:
         qw_spec_inner = pl.BlockSpec((bk // NIB, bn), lambda mi, ni, ki: (ki, ni))
@@ -205,7 +252,7 @@ def gptq_matmul(x: jnp.ndarray, qweight: jnp.ndarray, scales: jnp.ndarray,
                 pl.BlockSpec((gk, bn // NIB), lambda ki, ni: (ki * bk // g, ni)),
             ],
             out_specs=pl.BlockSpec((bk, bn), lambda ki, ni: (ki, ni)),
-            out_shape=jax.ShapeDtypeStruct((k, n), jnp.bfloat16),
+            out_shape=jax.ShapeDtypeStruct((k, n_pad), jnp.bfloat16),
             interpret=interpret,
         )(qweight, scales, qzeros)
         y = pl.pallas_call(
@@ -220,7 +267,7 @@ def gptq_matmul(x: jnp.ndarray, qweight: jnp.ndarray, scales: jnp.ndarray,
             scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
             interpret=interpret,
         )(x, w_bf16)
-        return y[:m]
+        return y[:m, :n]
 
     if strategy.accum_vmem:
         y = pl.pallas_call(
@@ -250,11 +297,11 @@ def gptq_matmul(x: jnp.ndarray, qweight: jnp.ndarray, scales: jnp.ndarray,
                 pl.BlockSpec((gk, bn // NIB), lambda ki, mi, ni: (ki * bk // g, ni)),
             ],
             out_specs=pl.BlockSpec((bm, bn), lambda ki, mi, ni: (mi, ni)),
-            out_shape=jax.ShapeDtypeStruct((m_pad, n), jnp.float32),
+            out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), jnp.float32),
             interpret=interpret,
         )(x, qweight, scales, qzeros)
         y = y.astype(out_dtype)
-    return y[:m]
+    return y[:m, :n]
 
 
 def _round_up(v: int, mult: int) -> int:

@@ -24,28 +24,31 @@ def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
 
     @pl.when(li == 0)
     def _():
-        h_ref[...] = h0_ref[0].astype(jnp.float32)
+        h_ref[...] = h0_ref[...][0].astype(jnp.float32)
 
     a = a_ref[...].astype(jnp.float32)                     # (bd, S)
     dvec = d_ref[...].astype(jnp.float32)                  # (bd,)
 
+    # NB: slice-based ref indexing throughout — integer indices in ref
+    # load/store tuples break the interpret-mode discharge rules on some
+    # jax versions (`'int' object has no attribute 'shape'`).
     def step(j, h):
-        xt = x_ref[0, j].astype(jnp.float32)               # (bd,)
-        dt = jax.nn.softplus(dt_ref[0, j].astype(jnp.float32))
-        bt = b_ref[0, j].astype(jnp.float32)               # (S,)
-        ct = c_ref[0, j].astype(jnp.float32)
+        row = (slice(0, 1), pl.ds(j, 1), slice(None))
+        xt = pl.load(x_ref, row)[0, 0].astype(jnp.float32)           # (bd,)
+        dt = jax.nn.softplus(pl.load(dt_ref, row)[0, 0].astype(jnp.float32))
+        bt = pl.load(b_ref, row)[0, 0].astype(jnp.float32)           # (S,)
+        ct = pl.load(c_ref, row)[0, 0].astype(jnp.float32)
         da = jnp.exp(dt[:, None] * a)                      # (bd, S)
         h = da * h + (dt * xt)[:, None] * bt[None, :]
         y = jnp.sum(h * ct[None, :], axis=1) + dvec * xt
-        pl.store(y_ref, (0, pl.ds(j, 1), slice(None)),
-                 y[None, :].astype(y_ref.dtype))
+        pl.store(y_ref, row, y[None, None, :].astype(y_ref.dtype))
         return h
 
     h_ref[...] = jax.lax.fori_loop(0, bl, step, h_ref[...])
 
     @pl.when(li == pl.num_programs(2) - 1)
     def _():
-        hout_ref[0] = h_ref[...].astype(hout_ref.dtype)
+        hout_ref[...] = h_ref[...][None].astype(hout_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bd", "bl", "interpret"))

@@ -222,14 +222,17 @@ def moe_apply_ep(p, x, *, cfg: ModelConfig, kernels=L.DEFAULT_KERNELS):
                 P(bspec, seq_ax, None),
                 P(model_ax, fsdp_ax, None), P(model_ax, fsdp_ax, None),
                 P(model_ax, None, fsdp_ax))
+    # jax >= 0.5 exposes jax.shard_map; older versions only have the
+    # experimental module, and spell the no-replication-check kwarg check_rep
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
     try:
-        shard = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                              out_specs=P(bspec, seq_ax, None),
-                              check_vma=False)
-    except TypeError:   # older jax spells the kwarg check_rep
-        shard = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                              out_specs=P(bspec, seq_ax, None),
-                              check_rep=False)
+        shard = sm(body, mesh=mesh, in_specs=in_specs,
+                   out_specs=P(bspec, seq_ax, None), check_vma=False)
+    except TypeError:
+        shard = sm(body, mesh=mesh, in_specs=in_specs,
+                   out_specs=P(bspec, seq_ax, None), check_rep=False)
     y = shard(x, gate, expert_idx,
               we["w_gate"].astype(x.dtype), we["w_up"].astype(x.dtype),
               we["w_down"].astype(x.dtype))

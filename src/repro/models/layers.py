@@ -132,10 +132,15 @@ def constrain_logits(x):
 # ------------------------------------------------------------------ kernel cfg
 @dataclasses.dataclass(frozen=True)
 class KernelConfig:
-    """How quantized linears execute (threaded through model apply fns)."""
+    """How quantized linears execute (threaded through model apply fns).
+
+    ``block_sizes`` is a concrete (bm, bn, bk) tuple, ``None`` for the kernel
+    defaults, or ``"auto"`` to consult the per-shape autotuner cache
+    (``kernels/autotune.py`` — tuned once per (M, K, N, group, strategy) key,
+    persisted to JSON)."""
     strategy: KernelStrategy = OPT4GPTQ
     use_pallas: bool = False          # False: jnp ref path (CPU / dry-run)
-    block_sizes: tuple[int, int, int] | None = None
+    block_sizes: tuple[int, int, int] | str | None = None
 
 
 DEFAULT_KERNELS = KernelConfig()

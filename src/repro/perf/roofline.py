@@ -144,6 +144,8 @@ def analyze(compiled, *, n_devices: int, model_flops_global: float,
             peak=PEAK_FLOPS, hbm=HBM_BW, link=LINK_BW) -> Roofline:
     from repro.perf import hlo_cost as H
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):        # older jax: one dict per program
+        ca = ca[0] if ca else {}
     xla_flops = float(ca.get("flops", 0.0))
     xla_bytes = float(ca.get("bytes accessed", 0.0))
     cost = H.analyze_text(compiled.as_text(), n_devices)

@@ -1,9 +1,16 @@
 """Serving engine: continuous batching over a slot cache with jitted
-prefill (bucketed lengths) and a single fixed-shape decode step — the vLLM
+prefill (bucketed lengths) and a single fused decode+sample step — the vLLM
 role in the paper's stack, adapted to TPU serving idioms (DESIGN.md §2).
 
-The decode step always runs the full slot batch; empty slots are masked by
-seq_lens == 0 and a live-mask on sampling.
+The decode hot loop is sync-free: per-request sampling parameters are lowered
+to per-slot device arrays (greedy flag, temperature, top-k/top-p, one PRNG
+key per slot), empty slots are masked on device, and the whole
+model-step + sample runs inside one ``jit``.  Exactly one device->host
+transfer happens per decode step — the (B,) sampled-token vector — instead of
+the seed's per-slot ``int()`` round-trips and host-side sampling loop.
+Prefill admission writes the slot's cache slice with
+``lax.dynamic_update_slice`` (one traced program for every slot index) rather
+than rebuilding the full cache tree per admitted request.
 """
 from __future__ import annotations
 
@@ -19,7 +26,7 @@ import numpy as np
 from repro.models import LM
 from repro.models import layers as L
 from repro.serving import kv_cache as KV
-from repro.serving.sampler import SamplingParams, sample
+from repro.serving.sampler import SamplingParams, sample, sample_batched
 from repro.serving.scheduler import (Active, Finished, Request, Scheduler,
                                      bucket_len)
 
@@ -51,16 +58,38 @@ class Engine:
         self._next_rid = 0
 
         self._decode = jax.jit(
-            functools.partial(self._decode_impl, self.model, self.kernels))
+            functools.partial(self._decode_impl, self.model, self.kernels),
+            static_argnames=("all_greedy",))
         self._prefill = jax.jit(
             functools.partial(self._prefill_impl, self.model, self.kernels))
+        self._read_slot = jax.jit(self._read_slot_impl)
+        self._write_slot = jax.jit(self._write_slot_impl)
 
     # ------------------------------------------------------------ jitted fns
     @staticmethod
-    def _decode_impl(model, kernels, params, tokens, cache, seq_lens):
+    def _decode_impl(model, kernels, params, tokens, cache, seq_lens, live,
+                     greedy, temps, top_ks, top_ps, keys, *,
+                     all_greedy: bool = False):
+        """Fused decode step: model forward + per-slot-parameterized sampling.
+
+        All sampling state arrives as per-slot arrays so one trace serves
+        every mix of greedy/temperature/top-k/top-p requests; ``all_greedy``
+        is a static host-known flag selecting an argmax-only second trace for
+        the common all-greedy batch — the sampling operands arrive as None
+        there (nothing staged, no rng split, no sort/softmax machinery).
+        Dead slots (``live == False``) keep seq_lens at 0 and emit token 0
+        (never read).
+        """
         logits, cache, seq_lens = model.decode_step(
             params, tokens, cache, seq_lens, kernels=kernels)
-        return logits, cache, seq_lens
+        if all_greedy:
+            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            toks = sample_batched(logits, keys, greedy=greedy, temps=temps,
+                                  top_ks=top_ks, top_ps=top_ps)
+        toks = jnp.where(live, toks, 0)
+        seq_lens = jnp.where(live, seq_lens, 0)
+        return toks, cache, seq_lens
 
     @staticmethod
     def _prefill_impl(model, kernels, params, tokens, length, cache, seq_lens):
@@ -70,6 +99,23 @@ class Engine:
             params, {"tokens": tokens}, cache, seq_lens, kernels=kernels,
             true_lengths=lengths)   # index within the text block
         return logits, cache, seq_lens - (tokens.shape[1] - length)
+
+    @staticmethod
+    def _read_slot_impl(cache, slot):
+        """Slice one slot's cache sub-tree (batch axis 1; traced slot index,
+        so every slot shares a single compiled program)."""
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=1)
+            if x.ndim >= 2 else x, cache)
+
+    @staticmethod
+    def _write_slot_impl(cache, sub, slot):
+        """Write a prefilled sub-tree back into the slot via
+        ``dynamic_update_slice`` — no whole-cache-tree rebuild per admit."""
+        return jax.tree_util.tree_map(
+            lambda full, s: jax.lax.dynamic_update_slice_in_dim(
+                full, s.astype(full.dtype), slot, axis=1)
+            if full.ndim >= 2 else s, cache, sub)
 
     # -------------------------------------------------------------- lifecycle
     def submit(self, tokens: list[int], max_new_tokens: int = 32,
@@ -94,20 +140,16 @@ class Engine:
             blen = bucket_len(len(req.tokens)) if paddable else len(req.tokens)
             toks = np.zeros((1, blen), np.int32)
             toks[0, :len(req.tokens)] = req.tokens
-            sub_cache = jax.tree_util.tree_map(
-                lambda x: x[:, slot:slot + 1] if x.ndim >= 2 else x,
-                self.slots.cache)
+            slot_idx = jnp.asarray(slot, jnp.int32)
+            sub_cache = self._read_slot(self.slots.cache, slot_idx)
             sub_lens = jnp.zeros((1,), jnp.int32)
             logits, sub_cache, sub_lens = self._prefill(
                 self.params, jnp.asarray(toks), len(req.tokens), sub_cache,
                 sub_lens)
             # prefill wrote positions [0, blen); real length excludes padding
-            self.slots.cache = jax.tree_util.tree_map(
-                lambda full, sub: full.at[:, slot:slot + 1].set(sub)
-                if full.ndim >= 2 else sub,
-                self.slots.cache, sub_cache)
-            self.slots.seq_lens = self.slots.seq_lens.at[slot].set(
-                int(sub_lens[0]))
+            self.slots.cache = self._write_slot(self.slots.cache, sub_cache,
+                                                slot_idx)
+            self.slots.seq_lens = self.slots.seq_lens.at[slot].set(sub_lens[0])
             self.stats.prefill_tokens += len(req.tokens)
             # sample the first generated token from the prefill logits
             self.rng, k = jax.random.split(self.rng)
@@ -126,42 +168,50 @@ class Engine:
             t_done=time.time()))
 
     def step(self) -> list[Finished]:
-        """One engine iteration: admissions + one batched decode step."""
+        """One engine iteration: admissions + one fused decode+sample step."""
         finished: list[Finished] = []
         self._admit(finished)
         if not self.sched.active:
             return finished
-        # batched decode over every slot (empty slots masked via live set)
-        tokens = np.zeros((self.slots.batch_slots, 1), np.int32)
+        # host-side staging: last tokens + per-slot sampling arrays (numpy,
+        # no device round-trips)
+        bs = self.slots.batch_slots
+        tokens = np.zeros((bs, 1), np.int32)
+        live = np.zeros((bs,), np.bool_)
+        greedy = np.ones((bs,), np.bool_)
+        temps = np.ones((bs,), np.float32)
+        top_ks = np.zeros((bs,), np.int32)
+        top_ps = np.ones((bs,), np.float32)
         for slot, a in self.sched.active.items():
+            sp = a.req.sampling
             tokens[slot, 0] = a.output[-1] if a.output else a.req.tokens[-1]
-        logits, self.slots.cache, self.slots.seq_lens = self._decode(
+            live[slot] = True
+            greedy[slot] = sp.greedy or sp.temperature == 0.0
+            temps[slot] = sp.temperature if sp.temperature > 0.0 else 1.0
+            top_ks[slot] = sp.top_k
+            top_ps[slot] = sp.top_p
+        all_greedy = bool(greedy.all())
+        if all_greedy:
+            # argmax-only trace: no rng consumption, no sampling operands
+            samp = (None, None, None, None, None)
+        else:
+            self.rng, sub = jax.random.split(self.rng)
+            samp = (jnp.asarray(greedy), jnp.asarray(temps),
+                    jnp.asarray(top_ks), jnp.asarray(top_ps),
+                    jax.random.split(sub, bs))
+        toks_dev, self.slots.cache, self.slots.seq_lens = self._decode(
             self.params, jnp.asarray(tokens), self.slots.cache,
-            self.slots.seq_lens)
-        # non-live slots advanced seq_lens too; reset them
-        live = sorted(self.sched.active)
-        dead = [s for s in range(self.slots.batch_slots) if s not in live]
-        if dead:
-            self.slots.seq_lens = self.slots.seq_lens.at[jnp.asarray(dead)].set(0)
-        self.rng, k = jax.random.split(self.rng)
-        # per-request sampling params can differ; group greedy vs sampled
-        toks = {}
-        greedy_ids = [s for s in live if self.sched.active[s].req.sampling.greedy]
-        other = [s for s in live if s not in greedy_ids]
-        if greedy_ids:
-            g = jnp.argmax(logits[jnp.asarray(greedy_ids)], axis=-1)
-            for i, s in enumerate(greedy_ids):
-                toks[s] = int(g[i])
-        for s in other:
-            self.rng, k2 = jax.random.split(self.rng)
-            toks[s] = int(sample(logits[s:s + 1], k2,
-                                 self.sched.active[s].req.sampling)[0])
-        self.stats.tokens_generated += len(live)
+            self.slots.seq_lens, jnp.asarray(live), *samp,
+            all_greedy=all_greedy)
+        # the single device->host transfer of the decode loop
+        toks = jax.device_get(toks_dev).tolist()
+        self.stats.tokens_generated += int(live.sum())
         self.stats.steps += 1
-        for s in live:
+        for s in sorted(self.sched.active):
             a = self.sched.active[s]
-            a.output.append(toks[s])
-            if toks[s] == self.eos_id or len(a.output) >= a.req.max_new_tokens:
+            tok = toks[s]
+            a.output.append(tok)
+            if tok == self.eos_id or len(a.output) >= a.req.max_new_tokens:
                 self._finish(s, finished)
         return finished
 

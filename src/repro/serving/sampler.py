@@ -32,3 +32,38 @@ def sample(logits: jnp.ndarray, rng, params: SamplingParams) -> jnp.ndarray:
         cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None], axis=-1)
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
     return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_batched(logits: jnp.ndarray, keys, *, greedy: jnp.ndarray,
+                   temps: jnp.ndarray, top_ks: jnp.ndarray,
+                   top_ps: jnp.ndarray) -> jnp.ndarray:
+    """Per-slot-parameterized sampling, fully on device and jittable.
+
+    logits: (B, V); keys: (B,) PRNG key array; greedy: (B,) bool (true also
+    for temperature==0); temps: (B,) > 0; top_ks: (B,) int32 (0 = off);
+    top_ps: (B,) float (1.0 = off).  For float32 logits (what the model head
+    always emits — ``LM._logits`` casts) row i reproduces exactly what
+    ``sample(logits[i:i+1], keys[i], SamplingParams(...))`` returns — the
+    engine's fused decode step relies on this equivalence (tested).  For
+    lower-precision logits the f32 cast below can move cutoff boundaries
+    relative to ``sample``'s native-dtype math.
+    """
+    v = logits.shape[-1]
+    greedy_toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    lf = logits.astype(jnp.float32) / jnp.maximum(temps, 1e-6)[:, None]
+    # top-k: k-th largest value per row as threshold (k=0 keeps everything)
+    kth_idx = jnp.clip(v - top_ks, 0, v - 1)
+    kth = jnp.take_along_axis(jnp.sort(lf, axis=-1), kth_idx[:, None], axis=-1)
+    lf = jnp.where((top_ks[:, None] > 0) & (lf < kth), -jnp.inf, lf)
+    # top-p on the post-top-k distribution (same op order as `sample`)
+    sorted_desc = jnp.sort(lf, axis=-1)[:, ::-1]
+    cum = jnp.cumsum(jax.nn.softmax(sorted_desc, axis=-1), axis=-1)
+    cutoff_idx = jnp.clip(jnp.sum(cum < top_ps[:, None], axis=-1), 0, v - 1)
+    cutoff = jnp.take_along_axis(sorted_desc, cutoff_idx[:, None], axis=-1)
+    lf = jnp.where((top_ps[:, None] < 1.0) & (lf < cutoff), -jnp.inf, lf)
+
+    sampled = jax.vmap(
+        lambda key, row: jax.random.categorical(key, row[None, :], axis=-1)[0]
+    )(keys, lf).astype(jnp.int32)
+    return jnp.where(greedy, greedy_toks, sampled)

@@ -1,0 +1,61 @@
+"""``hypothesis`` import shim for the property tests.
+
+Re-exports the real library when it is installed (``pip install -r
+requirements-dev.txt``).  Otherwise provides a deterministic example-based
+fallback so ``pytest`` still collects and runs the suite without the
+dependency: each ``@given`` test executes the bound extremes first (all-min,
+all-max) and then seeded random draws up to ``max_examples``.  Only the
+subset of the API these tests use is implemented (``given``, ``settings``,
+``strategies.integers``).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import random
+
+    class _IntStrategy:
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = lo, hi
+
+        def draw(self, rnd: random.Random) -> int:
+            return rnd.randint(self.lo, self.hi)
+
+    class strategies:  # noqa: N801 — mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _IntStrategy:
+            return _IntStrategy(min_value, max_value)
+
+    def settings(max_examples: int = 10, **_ignored):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                # read at call time from the outermost wrapper first, so
+                # @settings works both above and below @given (hypothesis
+                # documents the two orders as equivalent)
+                n = getattr(wrapper, "_shim_max_examples",
+                            getattr(fn, "_shim_max_examples", 10))
+                n = max(n, 1)
+                rnd = random.Random(fn.__qualname__)    # per-test determinism
+                examples = [tuple(s.lo for s in strats),
+                            tuple(s.hi for s in strats)]
+                examples += [tuple(s.draw(rnd) for s in strats)
+                             for _ in range(max(n - 2, 0))]
+                for ex in examples[:n]:
+                    fn(*args, *ex, **kwargs)
+            # hide the drawn params from pytest's fixture resolution (real
+            # hypothesis does the same): signature must be () not (kw, n, ...)
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

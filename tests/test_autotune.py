@@ -1,0 +1,91 @@
+"""Autotuner tests: candidate legality, cost-model pruning, cache round-trip
+(same key -> cached config with no re-timing), and end-to-end "auto" blocks
+through the ops dispatcher."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gptq
+from repro.core.opt_strategies import OPT4GPTQ, get_strategy
+from repro.kernels import autotune, ops
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv(autotune.ENV_CACHE, str(tmp_path / "autotune.json"))
+    autotune.clear_memory_cache()
+    yield
+    autotune.clear_memory_cache()
+
+
+def test_candidates_are_legal():
+    for m, k, n, g in [(1, 256, 128, 64), (8, 1024, 1024, 128),
+                       (128, 512, 256, -1), (4, 128, 60 + 4, 64)]:
+        cands = autotune.candidate_blocks(m, k, n, g)
+        assert cands
+        gg = g if g > 0 else k
+        for bm, bn, bk in cands:
+            assert bm % 8 == 0 and bn % 8 == 0 and bk % 8 == 0
+            assert k % bk == 0
+            assert bk % gg == 0 or gg % bk == 0
+
+
+def test_prune_keeps_near_optimal_front():
+    m, k, n, g = 8, 1024, 1024, 128
+    cands = autotune.candidate_blocks(m, k, n, g)
+    kept = autotune.prune_candidates(cands, m, k, n, g, OPT4GPTQ)
+    assert 1 <= len(kept) <= autotune.MAX_TIMED
+    assert set(kept) <= set(cands)
+    from repro.core.perf_model import gptq_matmul_cost
+
+    def modeled(c):
+        return gptq_matmul_cost(m, k, n, group_size=g, strategy=OPT4GPTQ,
+                                bk=c[2]).time_s
+
+    best = min(modeled(c) for c in cands)
+    # every survivor is within the prune factor of the modeled optimum
+    assert all(modeled(c) <= best * autotune.PRUNE_FACTOR for c in kept)
+    # and the front prefers larger tiles on model ties (fewer launches)
+    assert kept[0][1] * kept[0][2] == max(bn * bk for _, bn, bk in kept)
+
+
+def test_cache_roundtrip_no_retiming():
+    m, k, n, g = 4, 256, 128, 64
+    cfg = autotune.get_block_sizes(m, k, n, g, OPT4GPTQ)
+    assert len(cfg) == 3
+    timed = len(autotune.timed_keys)
+    # memory hit
+    assert autotune.get_block_sizes(m, k, n, g, OPT4GPTQ) == cfg
+    assert len(autotune.timed_keys) == timed
+    # file hit (fresh process simulation)
+    autotune.clear_memory_cache()
+    assert autotune.get_block_sizes(m, k, n, g, OPT4GPTQ) == cfg
+    assert len(autotune.timed_keys) == timed
+    data = json.load(open(autotune.cache_path()))
+    assert data[autotune.cache_key(m, k, n, g, OPT4GPTQ)] == list(cfg)
+
+
+def test_distinct_keys_per_strategy_lane_and_mode():
+    k1 = autotune.cache_key(4, 256, 128, 64, OPT4GPTQ)
+    k2 = autotune.cache_key(4, 256, 128, 64, get_strategy("baseline"))
+    k3 = autotune.cache_key(64, 256, 128, 64, OPT4GPTQ)
+    k4 = autotune.cache_key(4, 256, 128, 64, OPT4GPTQ, interpret=False)
+    assert len({k1, k2, k3, k4}) == 4
+    assert ":gemv:" in k1 and ":matmul:" in k3
+    # interpreter-mode timings must never be reused for compiled runs
+    assert k1.endswith("interp") and k4.endswith("compiled")
+
+
+def test_auto_blocks_through_ops_match_oracle():
+    rng = np.random.default_rng(0)
+    k, n, g = 256, 128, 64
+    w = jnp.asarray(rng.normal(0, 0.5, (k, n)).astype(np.float32))
+    ql = gptq.gptq_quantize(w, None, gptq.GPTQConfig(group_size=g))
+    for m in (3, 16):
+        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        y_ref = ops.gptq_linear(ql, x, use_pallas=False)
+        y = ops.gptq_linear(ql, x, use_pallas=True, block_sizes="auto")
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=2e-2, atol=2e-2)

@@ -1,7 +1,7 @@
 """Data pipeline: determinism, host sharding, resume semantics, workload
 stream statistics."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.data.pipeline import LMDataPipeline, sharegpt_stream
 

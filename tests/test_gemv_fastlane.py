@@ -1,0 +1,118 @@
+"""Decode fast-lane tests (ISSUE 1): fused GEMV kernel parity vs the jnp
+oracle across every strategy x group size x odd M, the M-threshold dispatcher,
+fused bias, and non-divisible-shape robustness of the general kernel."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gptq
+from repro.core.opt_strategies import STRATEGIES, get_strategy
+from repro.kernels import gptq_gemv
+from repro.kernels import gptq_matmul as gm
+from repro.kernels import ops
+
+
+def _make_quant(k, n, g, seed=0, bias=False):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 0.5, size=(k, n)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(n,)).astype(np.float32)) if bias else None
+    return gptq.gptq_quantize(w, None, gptq.GPTQConfig(group_size=g), bias=b)
+
+
+@pytest.mark.parametrize("m", [1, 3, 8])
+@pytest.mark.parametrize("g", [64, 128, -1])
+@pytest.mark.parametrize("strategy", sorted(STRATEGIES))
+def test_gemv_matches_oracle(strategy, g, m):
+    """All six ablation variants x group sizes {64, 128, per-column} x odd M."""
+    k, n = 128, 64
+    ql = _make_quant(k, n, g, seed=(g % 7) * 10 + m)
+    x = jnp.asarray(
+        np.random.default_rng(m).normal(size=(m, k)).astype(np.float32))
+    y_ref = ops.gptq_linear(ql, x, use_pallas=False)
+    # M <= GEMV_M_MAX routes through the GEMV lane inside gptq_linear
+    y = ops.gptq_linear(ql, x, strategy=get_strategy(strategy),
+                        use_pallas=True, block_sizes=(8, 64, 64))
+    atol = 1e-1 if strategy == "naive" else 2e-2
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-2, atol=atol)
+
+
+def test_dispatcher_routes_by_m(monkeypatch):
+    """Decode-shaped M goes to the GEMV lane, prefill M to the tiled matmul."""
+    calls = {"gemv": 0, "matmul": 0}
+    real_gemv, real_mm = gptq_gemv.gptq_gemv, gm.gptq_matmul
+
+    def spy_gemv(*a, **k):
+        calls["gemv"] += 1
+        return real_gemv(*a, **k)
+
+    def spy_mm(*a, **k):
+        calls["matmul"] += 1
+        return real_mm(*a, **k)
+
+    monkeypatch.setattr(ops._gemv, "gptq_gemv", spy_gemv)
+    monkeypatch.setattr(ops._gm, "gptq_matmul", spy_mm)
+    ql = _make_quant(128, 64, 64, seed=1)
+    x_small = jnp.ones((gptq_gemv.GEMV_M_MAX, 128), jnp.float32)
+    x_large = jnp.ones((gptq_gemv.GEMV_M_MAX + 1, 128), jnp.float32)
+    ops.gptq_linear(ql, x_small, use_pallas=True, block_sizes=(8, 64, 64))
+    assert calls == {"gemv": 1, "matmul": 0}
+    ops.gptq_linear(ql, x_large, use_pallas=True, block_sizes=(16, 64, 64))
+    assert calls == {"gemv": 1, "matmul": 1}
+
+
+def test_gemv_fused_bias():
+    k, n, m = 128, 64, 4
+    ql = _make_quant(k, n, 64, seed=5, bias=True)
+    x = jnp.asarray(
+        np.random.default_rng(5).normal(size=(m, k)).astype(np.float32))
+    y_ref = ops.gptq_linear(ql, x, use_pallas=False)
+    y = ops.gptq_linear(ql, x, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_gemv_leading_batch_dims():
+    k, n = 128, 64
+    ql = _make_quant(k, n, 64, seed=6)
+    x = jnp.asarray(
+        np.random.default_rng(6).normal(size=(2, 3, k)).astype(np.float32))
+    y_ref = ops.gptq_linear(ql, x, use_pallas=False)
+    y = ops.gptq_linear(ql, x, use_pallas=True)      # 2*3 = 6 rows -> GEMV
+    assert y.shape == (2, 3, n)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+# ------------------------------------------------- shape robustness (general)
+def test_matmul_pads_non_divisible_n():
+    """N=1016 with the default bn=256 used to hit a bare assert; now pads."""
+    k, n = 128, 1016
+    ql = _make_quant(k, n, 64, seed=7)
+    x = jnp.asarray(
+        np.random.default_rng(7).normal(size=(16, k)).astype(np.float32))
+    y_ref = ops.gptq_linear(ql, x, use_pallas=False)
+    y = ops.gptq_linear(ql, x, use_pallas=True)      # default block sizes
+    assert y.shape == (16, n)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_matmul_shrinks_non_divisible_bk():
+    """K=320 with requested bk=512 shrinks to a legal divisor, no crash."""
+    k, n = 320, 64
+    ql = _make_quant(k, n, 64, seed=8)
+    x = jnp.asarray(
+        np.random.default_rng(8).normal(size=(16, k)).astype(np.float32))
+    y_ref = ops.gptq_linear(ql, x, use_pallas=False)
+    y = ops.gptq_linear(ql, x, use_pallas=True, block_sizes=(16, 64, 512))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_resolve_block_sizes_unservable_raises():
+    with pytest.raises(ValueError, match="K=12"):
+        gm.resolve_block_sizes(1, 12, 64, 12, 8, 64, 64)
+    with pytest.raises(ValueError, match="N=60"):
+        gm.pad_cols(jnp.zeros((16, 60), jnp.int32), jnp.ones((2, 60)),
+                    jnp.zeros((2, 7), jnp.int32), 60, 64)

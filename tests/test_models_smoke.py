@@ -9,6 +9,9 @@ import pytest
 from repro.configs import ARCH_IDS, smoke_config
 from repro.models import build_model
 
+# ~10 archs x 3 checks x several seconds each: slow tier (run via --runslow)
+pytestmark = pytest.mark.slow
+
 B, S = 2, 24
 
 

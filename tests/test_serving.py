@@ -80,6 +80,86 @@ def test_eos_stops_generation(small_lm):
     assert len(done[0].output) == 1   # stopped right at eos
 
 
+def test_engine_fused_step_matches_unfused_reference(small_lm):
+    """One decode step of the sync-free fused path produces exactly the tokens
+    the legacy unfused path (model.decode_step + per-slot `sample`) would —
+    for a live mix of greedy / temperature / top-k / top-p requests."""
+    cfg, model, params = small_lm
+    eng = Engine(model, params, batch_slots=4, max_len=64, eos_id=-1)
+    rng = np.random.default_rng(3)
+    sps = [SamplingParams(greedy=True),
+           SamplingParams(temperature=0.8, top_k=5),
+           SamplingParams(temperature=1.3, top_p=0.9)]
+    for sp, plen in zip(sps, (5, 8, 11)):
+        eng.submit(rng.integers(2, cfg.vocab_size, size=plen).tolist(),
+                   max_new_tokens=4, sampling=sp)
+    eng._admit([])                        # prefill all three into their slots
+    cache0, lens0, rng0 = eng.slots.cache, eng.slots.seq_lens, eng.rng
+    last = {s: a.output[-1] for s, a in eng.sched.active.items()}
+
+    eng.step()
+
+    # unfused reference against the pre-step snapshot, same per-slot keys
+    bs = eng.slots.batch_slots
+    tokens = np.zeros((bs, 1), np.int32)
+    for s, tok in last.items():
+        tokens[s, 0] = tok
+    _, sub = jax.random.split(rng0)
+    keys = jax.random.split(sub, bs)
+    logits, _, _ = model.decode_step(params, jnp.asarray(tokens), cache0,
+                                     lens0)
+    for s, a in eng.sched.active.items():
+        expect = int(sample(logits[s:s + 1], keys[s], a.req.sampling)[0])
+        assert a.output[-1] == expect, (s, a.req.sampling)
+
+
+def test_engine_decode_is_sync_free(small_lm, monkeypatch):
+    """Each decode step makes exactly one device->host transfer (the sampled
+    token vector) and never calls the legacy per-slot sampler."""
+    import repro.serving.engine as engine_mod
+    cfg, model, params = small_lm
+    eng = Engine(model, params, batch_slots=2, max_len=32, eos_id=-1)
+    rng = np.random.default_rng(4)
+    for _ in range(2):
+        eng.submit(rng.integers(2, cfg.vocab_size, size=5).tolist(),
+                   max_new_tokens=4)
+    eng._admit([])                        # prefill outside the decode loop
+
+    transfers = {"n": 0}
+    real_get = jax.device_get
+
+    def counting_get(x):
+        transfers["n"] += 1
+        return real_get(x)
+
+    def no_legacy_sampler(*a, **k):
+        raise AssertionError("legacy per-slot sampler ran in the decode loop")
+
+    monkeypatch.setattr(engine_mod.jax, "device_get", counting_get)
+    monkeypatch.setattr(engine_mod, "sample", no_legacy_sampler)
+    steps = 3
+    for _ in range(steps):
+        eng.step()
+    assert transfers["n"] == steps
+
+
+def test_engine_mixed_sampling_end_to_end(small_lm):
+    cfg, model, params = small_lm
+    eng = Engine(model, params, batch_slots=3, max_len=64, eos_id=-1)
+    rng = np.random.default_rng(5)
+    rids = [
+        eng.submit(rng.integers(2, cfg.vocab_size, size=6).tolist(),
+                   max_new_tokens=5, sampling=sp)
+        for sp in (SamplingParams(greedy=True),
+                   SamplingParams(temperature=0.7, top_k=3),
+                   SamplingParams(temperature=1.1, top_p=0.8))]
+    done = eng.run()
+    assert sorted(f.rid for f in done) == sorted(rids)
+    for f in done:
+        assert len(f.output) == 5
+        assert all(0 <= t < cfg.vocab_size for t in f.output)
+
+
 # ------------------------------------------------------------------ PagedCache
 def test_paged_cache_alloc_free_cycle():
     pc = PagedCache(num_pages=16, page_size=4, n_layers=2, kv_heads=2, head_dim=8)

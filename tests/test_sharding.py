@@ -1,6 +1,7 @@
 """Sharding substrate tests: partition rules (divisibility sanitization,
 quantized TP-only rule), multi-device jit equivalence, and the shard_map EP
 MoE vs the einsum reference in a multi-device subprocess."""
+import os
 import pathlib
 import subprocess
 import sys
@@ -17,6 +18,10 @@ from repro.sharding import partition as SP
 
 ROOT = str(pathlib.Path(__file__).resolve().parents[1])
 ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+# forward platform selection: without it a CPU container with libtpu baked in
+# spends the whole subprocess timeout probing for TPU metadata
+if "JAX_PLATFORMS" in os.environ:
+    ENV["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
 
 
 def _run_sub(script: str) -> str:
@@ -74,6 +79,7 @@ print("QSPEC_OK", len(found))
 """
 
 
+@pytest.mark.slow
 def test_partition_rules_multidevice():
     out = _run_sub(SPEC_SCRIPT)
     assert "SPEC_OK" in out and "QSPEC_OK" in out
@@ -118,6 +124,7 @@ print("EP_OK")
 """
 
 
+@pytest.mark.slow
 def test_moe_ep_matches_einsum_multidevice():
     """shard_map expert-parallel MoE == einsum reference (8 fake devices)."""
     out = _run_sub(EP_SCRIPT)
@@ -161,6 +168,7 @@ print("PARITY_OK", float(m1["loss"]), float(m2["loss"]))
 """
 
 
+@pytest.mark.slow
 def test_sharded_train_step_matches_single_device():
     out = _run_sub(TRAIN_PARITY_SCRIPT)
     assert "PARITY_OK" in out

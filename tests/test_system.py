@@ -19,6 +19,9 @@ from repro.serving.engine import Engine
 from repro.training import optimizer as O
 from repro.training.train_loop import init_train_state, make_train_step
 
+# full train->quantize->serve pipelines: slow tier (run via --runslow)
+pytestmark = pytest.mark.slow
+
 
 def test_full_pipeline_train_quantize_serve():
     """The paper's deployment story end to end on a reduced model."""

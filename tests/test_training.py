@@ -2,6 +2,7 @@
 equivalence, checkpoint/restart (incl. kill-and-resume and torn-write
 rejection), elastic re-shard in a multi-device subprocess."""
 import json
+import os
 import pathlib
 import subprocess
 import sys
@@ -175,10 +176,13 @@ print("ELASTIC_OK")
 
 
 def test_elastic_reshard_multidevice(tmp_path):
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+    # forward platform selection: without it a CPU container with libtpu
+    # baked in spends the whole subprocess timeout probing for TPU metadata
+    if "JAX_PLATFORMS" in os.environ:
+        env["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
     r = subprocess.run(
         [sys.executable, "-c", ELASTIC_SCRIPT, str(tmp_path / "ck")],
-        capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+        capture_output=True, text=True, timeout=300, env=env,
         cwd=str(pathlib.Path(__file__).resolve().parents[1]))
     assert "ELASTIC_OK" in r.stdout, r.stdout + r.stderr
