@@ -1,8 +1,11 @@
 """Kernel microbench: per-strategy interpret-mode wall time (harness check)
 plus the modeled v5e bytes/time per strategy for the paper's canonical GEMM
-shapes — and the decode fast lane (ISSUE 1): for the decode-GEMV shape every
+shapes — the decode fast lane (ISSUE 1): for the decode-GEMV shape every
 strategy is timed on the seed's fixed-block general-matmul path AND on the
-GEMV lane with autotuned blocks, so the speedup is tracked per PR.
+GEMV lane with autotuned blocks, so the speedup is tracked per PR — and the
+paged-KV decode attention (ISSUE 2): the Pallas paged-attention kernel vs the
+jnp block-table gather reference vs the slot layout's contiguous grouped
+attend, at the same batch/context shape.
 
 Emits CSV lines through benchmarks/run.py and writes the structured record
 to BENCH_kernels.json at the repo root (the perf trajectory for later PRs).
@@ -12,6 +15,7 @@ from __future__ import annotations
 import json
 import os
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -20,6 +24,8 @@ from repro.core.opt_strategies import STRATEGIES
 from repro.core.perf_model import gptq_matmul_cost
 from repro.kernels import autotune, ops
 from repro.kernels import gptq_matmul as _gm
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ref import paged_attention_ref
 
 SHAPES = [
     ("decode_gemv", 8, 1024, 1024, 128),
@@ -35,6 +41,49 @@ def _time(fn, reps=REPS):
     """us per call, best-of-reps — same timer the autotuner selects with
     (autotune._time_call), so benchmark numbers and tuning decisions agree."""
     return autotune._time_call(fn, reps=reps) * 1e6
+
+
+# decode attention shape: batch rows x GQA heads over a paged 128-token context
+PAGED_SHAPE = dict(b=4, h=8, hkv=2, d=64, page_size=16, max_pages=8)
+
+
+def _bench_paged_decode(lines, records):
+    """Paged-vs-slot decode attention (ISSUE 2): the serving-side complement
+    of the GEMV lane.  Slot baseline is the contiguous grouped-GQA attend the
+    slot engine decodes with; the paged rows pay the block-table gather."""
+    from repro.models.attention import attend
+
+    p = PAGED_SHAPE
+    b, h, hkv, d = p["b"], p["h"], p["hkv"], p["d"]
+    ps, maxp = p["page_size"], p["max_pages"]
+    ctx = ps * maxp
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(b * maxp + 1, ps, hkv, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(b * maxp + 1, ps, hkv, d)), jnp.float32)
+    bt = jnp.asarray(1 + rng.permutation(b * maxp).reshape(b, maxp), jnp.int32)
+    lens = jnp.full((b,), ctx, jnp.int32)
+    kc = jnp.asarray(rng.normal(size=(b, ctx, hkv, d)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(b, ctx, hkv, d)), jnp.float32)
+
+    @jax.jit
+    def slot_decode(q, kc, vc, lens):
+        return attend(q[:, None], kc, vc, qpos=(lens - 1)[:, None],
+                      causal=True, grouped=True)
+
+    us_slot = _time(lambda: slot_decode(q, kc, vc, lens))
+    us_kernel = _time(lambda: paged_attention(q, kp, vp, bt, lens))
+    ref = jax.jit(paged_attention_ref)
+    us_ref = _time(lambda: ref(q, kp, vp, bt, lens))
+    rec = {"shape": "paged_decode", **p, "context": ctx,
+           "us_slot_attend": us_slot, "us_paged_kernel": us_kernel,
+           "us_paged_ref": us_ref,
+           "paged_vs_slot": us_kernel / us_slot if us_slot else 0.0}
+    records.append(rec)
+    lines.append(
+        f"kernel/paged_decode,{us_kernel:.0f},"
+        f"slot_us={us_slot:.0f}|ref_us={us_ref:.0f}|"
+        f"ctx={ctx}|ratio_vs_slot={rec['paged_vs_slot']:.2f}")
 
 
 def run():
@@ -87,6 +136,7 @@ def run():
                     f"model_us={cost.time_s * 1e6:.2f}|"
                     f"hbm_kb={cost.hbm_bytes / 1e3:.0f}")
             records.append(rec)
+    _bench_paged_decode(lines, records)
     try:
         with open(JSON_PATH, "w") as f:
             json.dump(records, f, indent=1)

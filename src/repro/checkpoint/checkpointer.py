@@ -15,8 +15,6 @@ copy (straggler mitigation at scale).
 """
 from __future__ import annotations
 
-import dataclasses
-import json
 import pathlib
 import shutil
 import threading

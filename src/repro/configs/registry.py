@@ -9,7 +9,7 @@ import importlib
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig, ShapeConfig
 
 ARCH_IDS = [
     "hymba_1p5b", "qwen1p5_110b", "codeqwen1p5_7b", "nemotron4_15b",

@@ -15,7 +15,6 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import packing
 from repro.core.gptq import GPTQConfig, QuantizedLinear, gptq_quantize
 
 PROJ_PARENTS = {

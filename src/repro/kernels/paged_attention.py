@@ -1,0 +1,120 @@
+"""Pallas TPU paged-attention decode kernel (ISSUE 2 tentpole).
+
+Decode over a paged KV cache: each sequence's keys/values live in
+non-contiguous fixed-size pages of a shared physical pool, addressed through a
+per-sequence block table — the vLLM PagedAttention layout the paper's serving
+substrate is built on, mapped to TPU idiom:
+
+* **Grid (B, Hkv, n_pages)** with the block table and sequence lengths as
+  *scalar-prefetch* operands: the K/V ``BlockSpec`` index maps read
+  ``block_tables[b, p]`` so each program DMAs exactly one physical page into
+  VMEM — the gather happens in the memory system, never as a materialized
+  (B, L, Hkv, D) copy.
+* **Online softmax over pages** — running max ``m``, normalizer ``l`` and an
+  fp32 output accumulator live in VMEM scratch across the page loop (same
+  scheme as ``flash_attention.py``); one writeback on the last page.
+* **GQA without head repetition** — the query block for a kv head is its
+  ``rep = H // Hkv`` query heads, shaped (rep, D); logits are (rep, page_size)
+  so K/V are read once per kv head, never repeated.
+* Pages past a sequence's length (block-table padding points at the null
+  page) still execute structurally but are fully masked, mirroring the
+  flash kernel's masked-tile convention.
+
+``kernels/ref.py::paged_attention_ref`` is the jnp oracle; ``interpret=True``
+(the default) runs this same kernel through the Pallas interpreter on CPU.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, page_size, scale):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (rep, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (page_size, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)               # (page_size, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    kpos = p * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, dimension=1)
+    s = jnp.where(kpos < len_ref[b], s, -jnp.inf)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    # fully-masked pages keep m == -inf: use a 0-based exp and zero correction
+    safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0)
+    pr = jnp.where(jnp.isfinite(s), jnp.exp(s - safe_m[:, None]), 0.0)
+    l_ref[...] = corr * l_ref[...] + pr.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        pr, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(p == pl.num_programs(2) - 1)
+    def _():
+        denom = jnp.maximum(l_ref[...], 1e-20)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                    block_tables: jnp.ndarray, lengths: jnp.ndarray, *,
+                    scale: float | None = None,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Single-token decode attention over a paged KV pool.
+
+    q            : (B, H, D) — one query token per sequence.
+    k_pages/v_pages: (P, page_size, Hkv, D) physical page pools.
+    block_tables : (B, max_pages) int32 — logical page i of sequence b lives
+                   in physical page ``block_tables[b, i]``; padding entries
+                   must point at a valid (e.g. null) page.
+    lengths      : (B,) int32 — keys at logical positions < lengths[b] attend
+                   (the just-written decode token included).
+    Returns (B, H, D).
+    """
+    b, h, d = q.shape
+    _, page_size, hkv, _ = k_pages.shape
+    assert h % hkv == 0, (h, hkv)
+    rep = h // hkv
+    max_pages = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    qg = q.reshape(b, hkv, rep, d)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, d), lambda b, h, p, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, d),
+                         lambda b, h, p, bt, ln: (bt[b, p], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, d),
+                         lambda b, h, p, bt, ln: (bt[b, p], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, d),
+                               lambda b, h, p, bt, ln: (b, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((rep,), jnp.float32),
+                        pltpu.VMEM((rep,), jnp.float32),
+                        pltpu.VMEM((rep, d), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, page_size=page_size, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return out.reshape(b, h, d)

@@ -80,6 +80,34 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     return out.astype(q.dtype)
 
 
+def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                        v_pages: jnp.ndarray, block_tables: jnp.ndarray,
+                        lengths: jnp.ndarray, *,
+                        scale: float | None = None) -> jnp.ndarray:
+    """Oracle for ``kernels/paged_attention.py``: gather every sequence's
+    pages into a contiguous (B, max_pages*page_size, Hkv, D) view, then run
+    masked grouped attention.  q: (B, H, D); k/v_pages: (P, ps, Hkv, D);
+    block_tables: (B, max_pages) int32; lengths: (B,) int32. -> (B, H, D)."""
+    b, h, d = q.shape
+    _, ps, hkv, _ = k_pages.shape
+    rep = h // hkv
+    k = k_pages[block_tables].reshape(b, -1, hkv, d)    # (B, maxp*ps, Hkv, D)
+    v = v_pages[block_tables].reshape(b, -1, hkv, d)
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hkv, rep, d)
+    logits = jnp.einsum("bgrd,bkgd->bgrk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = kpos < lengths[:, None]                      # (B, maxp*ps)
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    # exact-zero masked keys: a lengths[b] == 0 row yields 0 output, matching
+    # the kernel's fully-masked-page convention
+    p = p * mask[:, None, None]
+    out = jnp.einsum("bgrk,bkgd->bgrd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
 def selective_scan_ref(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
                        b: jnp.ndarray, c: jnp.ndarray, d: jnp.ndarray,
                        h0: jnp.ndarray | None = None):

@@ -18,10 +18,13 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--cache", choices=("slot", "paged"), default="slot",
+                    help="KV layout: fixed slots or PagedAttention block "
+                         "tables (DESIGN.md §10)")
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args(argv)
 
     import jax
-    import numpy as np
 
     from repro.configs import get_config, smoke_config
     from repro.core.gptq import GPTQConfig
@@ -39,7 +42,8 @@ def main(argv=None):
                           use_pallas=not args.no_pallas,
                           block_sizes=(8, 64, 64))
     eng = Engine(model, qparams, batch_slots=args.slots,
-                 max_len=args.max_len, kernels=kern, eos_id=-1)
+                 max_len=args.max_len, kernels=kern, eos_id=-1,
+                 cache=args.cache, page_size=args.page_size)
     stream = sharegpt_stream(args.requests, vocab_size=cfg.vocab_size,
                              seed=0, mean_prompt=10, mean_output=args.max_new,
                              max_prompt=args.max_len // 2)
@@ -50,9 +54,13 @@ def main(argv=None):
     dt = time.time() - t0
     toks = sum(len(f.output) for f in done)
     lat = sorted(f.latency for f in done)
-    print(f"[serve] {cfg.name} x {args.strategy}: {len(done)} reqs, "
-          f"{toks} tokens, {toks / dt:.2f} tok/s (interpret), "
-          f"p50 {lat[len(lat) // 2]:.2f}s")
+    extra = ""
+    if args.cache == "paged":
+        extra = (f", prefix-hit pages {eng.stats.prefix_hit_pages}"
+                 f" ({eng.stats.prefix_hit_tokens} tokens)")
+    print(f"[serve] {cfg.name} x {args.strategy} [{args.cache}]: "
+          f"{len(done)} reqs, {toks} tokens, {toks / dt:.2f} tok/s "
+          f"(interpret), p50 {lat[len(lat) // 2]:.2f}s{extra}")
 
 
 if __name__ == "__main__":

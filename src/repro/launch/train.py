@@ -10,7 +10,6 @@ production mesh; on CPU use --fake-devices/--mesh for small-scale runs.
 import argparse
 import dataclasses
 import os
-import sys
 
 
 def main(argv=None):

@@ -7,8 +7,11 @@ chunking** (`lax.map` + checkpoint) so (B, H, Sq, Sk) logits never exceed a
 chunk — the jnp analogue of flash attention, mandatory for 32k prefill /
 train_4k backward memory.
 
-Cache layouts (slot-based contiguous — TPU-idiomatic, see DESIGN.md §2):
-  full attention : k/v (B, max_len, Hkv, D); write at seq_lens via scatter
+Cache layouts (DESIGN.md §2/§10):
+  full attention : slot — k/v (B, max_len, Hkv, D), write at seq_lens via
+                   scatter; or paged — k/v pools (pages, page_size, Hkv, D)
+                   addressed through a per-sequence device block table
+                   (decode runs kernels/paged_attention.py)
   sliding window : ring buffers (B, window + num_sink, Hkv, D); the first
                    num_sink slots pin attention sinks (hymba meta tokens)
   MLA            : compressed (B, max_len, kv_lora + rope_dim)
@@ -22,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import paged_attention as PA
 from repro.models import layers as L
 
 Q_CHUNK = 2048          # max query rows per logits block
@@ -126,7 +130,8 @@ def gqa_init(rng, cfg: ModelConfig, dtype=jnp.float32):
 
 def gqa_apply(p, x, *, cfg: ModelConfig, kernels=L.DEFAULT_KERNELS,
               positions=None, cache=None, seq_lens=None, window: int = 0,
-              causal: bool = True, num_sink: int = 0):
+              causal: bool = True, num_sink: int = 0, block_tables=None,
+              write_lens=None):
     """Returns (out, new_cache)."""
     b, s, d = x.shape
     hd = cfg.head_dim
@@ -147,6 +152,39 @@ def gqa_apply(p, x, *, cfg: ModelConfig, kernels=L.DEFAULT_KERNELS,
         out = attend(q, k, v, qpos=qpos, causal=causal and not cfg.is_encoder,
                      window=window, num_sink=num_sink, chunk=chunk)
         new_cache = None
+    elif "k_pages" in cache:
+        # Paged layout (DESIGN.md §10): K/V pages of a shared physical pool
+        # addressed through the per-sequence device block table.  Decode runs
+        # the Pallas paged-attention kernel; prefill gathers the table into a
+        # contiguous view for chunked attend.  Right-padded (bucketed)
+        # prefill passes ``write_lens`` — padded positions' writes are routed
+        # to the null page so they never corrupt real pages.
+        assert block_tables is not None, "paged cache requires block_tables"
+        assert window == 0 and num_sink == 0, "paged layout is full-attn only"
+        kp, vp = cache["k_pages"], cache["v_pages"]
+        ps = kp.shape[1]
+        maxp = block_tables.shape[1]
+        tpos = seq_lens[:, None] + jnp.arange(s)[None, :]          # (B, S) abs
+        pages = jnp.take_along_axis(block_tables,
+                                    jnp.minimum(tpos // ps, maxp - 1), axis=1)
+        if write_lens is not None:                                 # (B,) real
+            pages = jnp.where(jnp.arange(s)[None, :] < write_lens[:, None],
+                              pages, 0)                            # null page
+        offs = tpos % ps
+        # one scatter per pool per layer-call: every new token's KV lands in
+        # its (page, offset) cell in a single batched write
+        kp = kp.at[pages, offs].set(k.astype(kp.dtype))
+        vp = vp.at[pages, offs].set(v.astype(vp.dtype))
+        if s == 1 and kernels.paged_attention_impl == "kernel":
+            out = PA.paged_attention(q[:, 0], kp, vp, block_tables,
+                                     seq_lens + 1)[:, None]
+        else:
+            hkv = k.shape[2]
+            k_all = kp[block_tables].reshape(b, -1, hkv, hd).astype(k.dtype)
+            v_all = vp[block_tables].reshape(b, -1, hkv, hd).astype(v.dtype)
+            out = attend(q, k_all, v_all, qpos=tpos, causal=True, chunk=chunk,
+                         grouped=s <= 8)
+        new_cache = {"k_pages": kp, "v_pages": vp}
     else:
         kc, vc = cache["k"], cache["v"]
         cap = kc.shape[1]

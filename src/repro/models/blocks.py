@@ -9,7 +9,6 @@ deepseek-v2 has a leading dense-FFN layer before the MoE stack.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -116,10 +115,32 @@ def block_cache_init(cfg: ModelConfig, kind: BlockKind, batch: int,
     return c
 
 
+def block_paged_cache_init(cfg: ModelConfig, kind: BlockKind, num_pages: int,
+                           page_size: int, dtype=jnp.bfloat16):
+    """Paged-layout cache for one block: (num_pages + 1, page_size, Hkv, D)
+    physical pools (page 0 is the null page — see serving/kv_cache.py).
+    Only homogeneous full-attention stacks support paging."""
+    if kind.attn != "full" or kind.ssm:
+        raise ValueError(
+            f"paged cache layout supports full-attention blocks only, got "
+            f"attn={kind.attn!r} ssm={kind.ssm}")
+    shape = (num_pages + 1, page_size, cfg.num_kv_heads, cfg.head_dim)
+    return {"attn": {"k_pages": jnp.zeros(shape, dtype),
+                     "v_pages": jnp.zeros(shape, dtype)}}
+
+
+def group_paged_cache_init(cfg, kind, count, num_pages, page_size,
+                           dtype=jnp.bfloat16):
+    one = block_paged_cache_init(cfg, kind, num_pages, page_size, dtype)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (count,) + a.shape), one)
+
+
 # ----------------------------------------------------------------- block apply
 def block_apply(p, x, *, cfg: ModelConfig, kind: BlockKind,
                 kernels=L.DEFAULT_KERNELS, positions=None, cache=None,
-                seq_lens=None, num_sink: int = 0):
+                seq_lens=None, num_sink: int = 0, block_tables=None,
+                write_lens=None):
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache: dict = {}
@@ -141,7 +162,9 @@ def block_apply(p, x, *, cfg: ModelConfig, kind: BlockKind,
                                  positions=positions,
                                  cache=cache.get("attn") if cache else None,
                                  seq_lens=seq_lens, window=window,
-                                 causal=not cfg.is_encoder, num_sink=num_sink)
+                                 causal=not cfg.is_encoder, num_sink=num_sink,
+                                 block_tables=block_tables,
+                                 write_lens=write_lens)
             branch_out = ao
             if ac is not None:
                 new_cache["attn"] = ac
@@ -187,7 +210,8 @@ def group_cache_init(cfg, kind, count, batch, max_len, dtype=jnp.bfloat16):
 
 def group_apply(stack, x, *, cfg: ModelConfig, kind: BlockKind, count: int,
                 kernels=L.DEFAULT_KERNELS, positions=None, cache=None,
-                seq_lens=None, num_sink: int = 0, remat: str | None = None):
+                seq_lens=None, num_sink: int = 0, remat: str | None = None,
+                block_tables=None, write_lens=None):
     """Scan a homogeneous group of ``count`` blocks. Returns (x, new_cache, aux)."""
     remat = remat if remat is not None else cfg.remat
 
@@ -195,7 +219,8 @@ def group_apply(stack, x, *, cfg: ModelConfig, kind: BlockKind, count: int,
         x = L.constrain_act(x)   # keep scan carry / saved residuals sharded
         return block_apply(p, x, cfg=cfg, kind=kind, kernels=kernels,
                            positions=positions, cache=c, seq_lens=seq_lens,
-                           num_sink=num_sink)
+                           num_sink=num_sink, block_tables=block_tables,
+                           write_lens=write_lens)
 
     if remat == "full":
         body_fn = jax.checkpoint(body_fn)

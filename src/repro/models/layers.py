@@ -8,7 +8,7 @@ the (unjitted, unrolled) GPTQ calibration pass.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+import enum
 
 import jax
 import jax.numpy as jnp
@@ -130,17 +130,36 @@ def constrain_logits(x):
 
 
 # ------------------------------------------------------------------ kernel cfg
+class CacheLayout(str, enum.Enum):
+    """Serving KV-cache layout (DESIGN.md §2/§10).
+
+    SLOT  : contiguous (B, max_len, ...) per-slot cache — the TPU-idiomatic
+            default; shape-stable jitted decode.
+    PAGED : block-table pages over a shared physical pool — the vLLM
+            PagedAttention layout; decode runs the Pallas paged-attention
+            kernel (``kernels/paged_attention.py``).
+    """
+    SLOT = "slot"
+    PAGED = "paged"
+
+
 @dataclasses.dataclass(frozen=True)
 class KernelConfig:
-    """How quantized linears execute (threaded through model apply fns).
+    """How quantized linears and the serving cache execute (threaded through
+    model apply fns).
 
     ``block_sizes`` is a concrete (bm, bn, bk) tuple, ``None`` for the kernel
     defaults, or ``"auto"`` to consult the per-shape autotuner cache
     (``kernels/autotune.py`` — tuned once per (M, K, N, group, strategy) key,
-    persisted to JSON)."""
+    persisted to JSON).  ``cache_layout`` selects the serving cache layout
+    (``Engine(cache=...)`` defaults to it); ``paged_attention_impl`` picks the
+    paged decode hot path — ``"kernel"`` (the Pallas kernel, interpret-mode
+    on CPU) or ``"ref"`` (jnp gather + grouped attention, for debugging)."""
     strategy: KernelStrategy = OPT4GPTQ
     use_pallas: bool = False          # False: jnp ref path (CPU / dry-run)
     block_sizes: tuple[int, int, int] | str | None = None
+    cache_layout: str = CacheLayout.SLOT
+    paged_attention_impl: str = "kernel"
 
 
 DEFAULT_KERNELS = KernelConfig()

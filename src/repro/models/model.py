@@ -12,7 +12,6 @@ One class covers all 10 assigned families; behaviour is driven entirely by
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -72,7 +71,8 @@ class LM:
 
     # ----------------------------------------------------------------- forward
     def hidden(self, params, batch, *, kernels=L.DEFAULT_KERNELS,
-               cache=None, seq_lens=None, mode: str = "train"):
+               cache=None, seq_lens=None, mode: str = "train",
+               block_tables=None, write_lens=None):
         """Backbone forward -> (final-norm hidden states, new_cache, aux)."""
         cfg = self.cfg
         dtype = jnp.dtype(cfg.dtype)
@@ -97,7 +97,8 @@ class LM:
             x, nc, aux = B.group_apply(
                 params[f"group{i}"], x, cfg=cfg, kind=kind, count=count,
                 kernels=kernels, positions=positions, cache=c,
-                seq_lens=seq_lens, num_sink=nmeta, remat=remat)
+                seq_lens=seq_lens, num_sink=nmeta, remat=remat,
+                block_tables=block_tables, write_lens=write_lens)
             if new_cache is not None:
                 new_cache[f"group{i}"] = nc
             aux_total = aux_total + aux
@@ -115,12 +116,13 @@ class LM:
                         name="head").astype(jnp.float32)
 
     def apply(self, params, batch, *, kernels=L.DEFAULT_KERNELS,
-              cache=None, seq_lens=None, mode: str = "train"):
+              cache=None, seq_lens=None, mode: str = "train",
+              block_tables=None, write_lens=None):
         """Returns (logits, new_cache, aux). Full-sequence (train/prefill) when
         cache is None or decode-with-cache otherwise."""
         x, new_cache, aux_total = self.hidden(
             params, batch, kernels=kernels, cache=cache, seq_lens=seq_lens,
-            mode=mode)
+            mode=mode, block_tables=block_tables, write_lens=write_lens)
         return self._logits(params, x), new_cache, aux_total
 
     # ------------------------------------------------------------------- cache
@@ -131,6 +133,22 @@ class LM:
         for i, (count, kind) in enumerate(B.layer_groups(cfg)):
             cache[f"group{i}"] = B.group_cache_init(cfg, kind, count, batch_size,
                                                     total, dtype)
+        return cache
+
+    def init_paged_cache(self, num_pages: int, page_size: int,
+                         dtype=jnp.bfloat16):
+        """Paged-layout cache tree (DESIGN.md §10): per-group physical page
+        pools addressed by a shared block table.  Requires a homogeneous
+        full-attention stack with no meta tokens.  The dtype default mirrors
+        ``init_cache``; the serving engine always passes
+        ``kv_cache.DEFAULT_CACHE_DTYPE`` explicitly."""
+        cfg = self.cfg
+        if cfg.meta_tokens:
+            raise ValueError("paged cache layout does not support meta tokens")
+        cache = {}
+        for i, (count, kind) in enumerate(B.layer_groups(cfg)):
+            cache[f"group{i}"] = B.group_paged_cache_init(
+                cfg, kind, count, num_pages, page_size, dtype)
         return cache
 
     # -------------------------------------------------------------------- loss
@@ -168,7 +186,8 @@ class LM:
 
     # ----------------------------------------------------------- serving steps
     def prefill(self, params, batch, cache, seq_lens, *,
-                kernels=L.DEFAULT_KERNELS, true_lengths=None):
+                kernels=L.DEFAULT_KERNELS, true_lengths=None,
+                block_tables=None):
         """Process a full prompt while writing the cache; returns logits of the
         last *real* position (``true_lengths`` handles right-padded bucketed
         prompts), new cache, new seq_lens."""
@@ -186,9 +205,12 @@ class LM:
                                      cache=cache, seq_lens=seq_lens,
                                      mode="prefill")
             seq_lens = seq_lens + cfg.meta_tokens
+        # paged + bucketed prompts: route padded positions' page writes to
+        # the null page (real writes cover true_lengths tokens of the block)
+        write_lens = true_lengths if block_tables is not None else None
         logits, cache, _ = self.apply(
             params, batch, kernels=kernels, cache=cache, seq_lens=seq_lens,
-            mode="prefill")
+            mode="prefill", block_tables=block_tables, write_lens=write_lens)
         if true_lengths is None:
             last = logits[:, -1]
         else:
@@ -198,14 +220,14 @@ class LM:
         return last, cache, seq_lens + s
 
     def decode_step(self, params, tokens, cache, seq_lens, *,
-                    kernels=L.DEFAULT_KERNELS, extra=None):
+                    kernels=L.DEFAULT_KERNELS, extra=None, block_tables=None):
         """tokens: (B, 1). Returns (logits (B, V), cache, seq_lens+1)."""
         batch = {"tokens": tokens}
         if extra:
             batch.update(extra)
         logits, cache, _ = self.apply(params, batch, kernels=kernels,
                                       cache=cache, seq_lens=seq_lens,
-                                      mode="decode")
+                                      mode="decode", block_tables=block_tables)
         return logits[:, -1], cache, seq_lens + 1
 
 

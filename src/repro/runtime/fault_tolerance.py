@@ -17,7 +17,6 @@ import dataclasses
 import time
 from typing import Any, Callable
 
-import jax
 
 from repro.checkpoint.checkpointer import Checkpointer
 

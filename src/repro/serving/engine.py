@@ -1,23 +1,32 @@
-"""Serving engine: continuous batching over a slot cache with jitted
-prefill (bucketed lengths) and a single fused decode+sample step — the vLLM
-role in the paper's stack, adapted to TPU serving idioms (DESIGN.md §2).
+"""Serving engine: continuous batching with jitted prefill and a single fused
+decode+sample step — the vLLM role in the paper's stack (DESIGN.md §2, §10).
 
-The decode hot loop is sync-free: per-request sampling parameters are lowered
-to per-slot device arrays (greedy flag, temperature, top-k/top-p, one PRNG
-key per slot), empty slots are masked on device, and the whole
-model-step + sample runs inside one ``jit``.  Exactly one device->host
-transfer happens per decode step — the (B,) sampled-token vector — instead of
-the seed's per-slot ``int()`` round-trips and host-side sampling loop.
-Prefill admission writes the slot's cache slice with
-``lax.dynamic_update_slice`` (one traced program for every slot index) rather
-than rebuilding the full cache tree per admitted request.
+Two cache layouts, selected by ``Engine(cache=...)`` (default: the
+``KernelConfig.cache_layout`` enum):
+
+* ``"slot"`` — the model's native contiguous cache, fixed ``max_len`` per
+  decode slot; bucketed prefill lengths (bounded jit recompiles).
+* ``"paged"`` — the PagedAttention layout: fixed-size KV pages of a shared
+  physical pool addressed through a device block table
+  (``serving/kv_cache.py::PagedCache``), page-budget admission that reserves
+  the full prompt+decode footprint up front (generation can never hit pool
+  exhaustion mid-flight), a hashed-prefix cache (prefix-hit requests prefill
+  only their suffix against the reused pages), and the Pallas
+  paged-attention kernel on the decode hot path.  Prefill is bucketed like
+  the slot path — padded positions' page writes are routed to the null page
+  (``write_lens``), so recompiles stay bounded by the bucket set.
+
+The decode hot loop is sync-free in both layouts: per-request sampling
+parameters are lowered to per-row device arrays (greedy flag, temperature,
+top-k/top-p, one PRNG key per row), empty rows are masked on device, and the
+whole model-step + sample runs inside one ``jit``.  Exactly one device->host
+transfer happens per decode step — the (B,) sampled-token vector.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +36,7 @@ from repro.models import LM
 from repro.models import layers as L
 from repro.serving import kv_cache as KV
 from repro.serving.sampler import SamplingParams, sample, sample_batched
-from repro.serving.scheduler import (Active, Finished, Request, Scheduler,
+from repro.serving.scheduler import (Finished, Request, Scheduler,
                                      bucket_len)
 
 
@@ -37,6 +46,10 @@ class EngineStats:
     prefill_tokens: int = 0
     steps: int = 0
     wall_s: float = 0.0
+    # paged layout: pages/tokens served from the hashed-prefix cache instead
+    # of being re-prefilled
+    prefix_hit_pages: int = 0
+    prefix_hit_tokens: int = 0
 
     @property
     def decode_throughput(self) -> float:
@@ -46,42 +59,92 @@ class EngineStats:
 class Engine:
     def __init__(self, model: LM, params, *, batch_slots: int = 8,
                  max_len: int = 512, kernels: L.KernelConfig = L.DEFAULT_KERNELS,
-                 eos_id: int = 1, cache_dtype=jnp.float32, seed: int = 0):
+                 eos_id: int = 1, cache_dtype=None, seed: int = 0,
+                 cache: str | None = None, page_size: int = 16,
+                 num_pages: int | None = None):
         self.model = model
         self.params = params
         self.kernels = kernels
         self.eos_id = eos_id
-        self.slots = KV.SlotCache(model, batch_slots, max_len, dtype=cache_dtype)
         self.sched = Scheduler()
         self.rng = jax.random.key(seed)
         self.stats = EngineStats()
         self._next_rid = 0
+        cache_dtype = cache_dtype if cache_dtype is not None \
+            else KV.DEFAULT_CACHE_DTYPE
+        self.cache_dtype = jnp.dtype(cache_dtype)
 
+        layout = cache if cache is not None else kernels.cache_layout
+        self.layout = getattr(layout, "value", layout)
+        if self.layout not in ("slot", "paged"):
+            raise ValueError(f"unknown cache layout {layout!r}")
+
+        if self.layout == "paged":
+            cfg = model.cfg
+            max_pages = -(-max_len // page_size)
+            if num_pages is None:
+                # capacity-equivalent default: the slot cache's worst-case
+                # token budget, but shared across rows at page granularity
+                num_pages = batch_slots * max_pages
+            # bookkeeping-only manager: page payloads live in the model cache
+            # tree below; the manager owns the device block table + free lists
+            self.pc = KV.PagedCache(
+                num_pages=num_pages, page_size=page_size,
+                n_layers=cfg.num_layers, kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.head_dim, dtype=cache_dtype,
+                max_seqs=batch_slots, max_pages=max_pages, alloc_pools=False)
+            # raises for stacks paging can't serve (SSM/SWA/MLA/meta tokens)
+            self.cache = model.init_paged_cache(num_pages, page_size,
+                                                dtype=cache_dtype)
+            self.slots = None
+        else:
+            self.slots = KV.SlotCache(model, batch_slots, max_len,
+                                      dtype=cache_dtype)
+            self.pc = None
+        self.batch_rows = batch_slots
+        self.max_len = max_len
+
+        # donate the cache tree (and decode seq_lens) so XLA updates the KV
+        # pools in place instead of copying the whole pool every step — the
+        # engine reassigns them from the jit results and keeps no other
+        # reference.  CPU has no donation support (it would only warn), so
+        # gate on the backend.
+        cpu = jax.default_backend() == "cpu"
         self._decode = jax.jit(
             functools.partial(self._decode_impl, self.model, self.kernels),
-            static_argnames=("all_greedy",))
+            static_argnames=("all_greedy",),
+            donate_argnums=() if cpu else (2, 3))       # cache, seq_lens
         self._prefill = jax.jit(
-            functools.partial(self._prefill_impl, self.model, self.kernels))
+            functools.partial(self._prefill_impl, self.model, self.kernels),
+            donate_argnums=() if cpu else (3,))         # slot sub-cache
+        self._prefill_paged = jax.jit(
+            functools.partial(self._prefill_paged_impl, self.model,
+                              self.kernels),
+            donate_argnums=() if cpu else (3,))         # paged cache tree
         self._read_slot = jax.jit(self._read_slot_impl)
-        self._write_slot = jax.jit(self._write_slot_impl)
+        self._write_slot = jax.jit(self._write_slot_impl,
+                                   donate_argnums=() if cpu else (0,))
 
     # ------------------------------------------------------------ jitted fns
     @staticmethod
-    def _decode_impl(model, kernels, params, tokens, cache, seq_lens, live,
-                     greedy, temps, top_ks, top_ps, keys, *,
-                     all_greedy: bool = False):
-        """Fused decode step: model forward + per-slot-parameterized sampling.
+    def _decode_impl(model, kernels, params, tokens, cache, seq_lens,
+                     block_tables, live, greedy, temps, top_ks, top_ps, keys,
+                     *, all_greedy: bool = False):
+        """Fused decode step: model forward + per-row-parameterized sampling.
 
-        All sampling state arrives as per-slot arrays so one trace serves
+        All sampling state arrives as per-row arrays so one trace serves
         every mix of greedy/temperature/top-k/top-p requests; ``all_greedy``
         is a static host-known flag selecting an argmax-only second trace for
         the common all-greedy batch — the sampling operands arrive as None
         there (nothing staged, no rng split, no sort/softmax machinery).
-        Dead slots (``live == False``) keep seq_lens at 0 and emit token 0
-        (never read).
+        ``block_tables`` is None on the slot path.  Dead rows
+        (``live == False``) keep seq_lens at 0 and emit token 0 (never read);
+        in the paged layout their block-table row points at the null page,
+        which absorbs their masked writes.
         """
         logits, cache, seq_lens = model.decode_step(
-            params, tokens, cache, seq_lens, kernels=kernels)
+            params, tokens, cache, seq_lens, kernels=kernels,
+            block_tables=block_tables)
         if all_greedy:
             toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         else:
@@ -98,6 +161,20 @@ class Engine:
         logits, cache, seq_lens = model.prefill(
             params, {"tokens": tokens}, cache, seq_lens, kernels=kernels,
             true_lengths=lengths)   # index within the text block
+        return logits, cache, seq_lens - (tokens.shape[1] - length)
+
+    @staticmethod
+    def _prefill_paged_impl(model, kernels, params, tokens, length, cache,
+                            seq_start, block_tables):
+        """Bucketed (possibly suffix-only) prefill writing KV pages through
+        the block table.  ``seq_start`` is the prefix-hit length; ``length``
+        is the true suffix length — padded positions' page writes are routed
+        to the null page (write_lens inside model.prefill), so bucketing is
+        as safe as on the slot path and recompiles stay bounded."""
+        lengths = jnp.full((tokens.shape[0],), length, jnp.int32)
+        logits, cache, seq_lens = model.prefill(
+            params, {"tokens": tokens}, cache, seq_start, kernels=kernels,
+            true_lengths=lengths, block_tables=block_tables)
         return logits, cache, seq_lens - (tokens.shape[1] - length)
 
     @staticmethod
@@ -120,6 +197,14 @@ class Engine:
     # -------------------------------------------------------------- lifecycle
     def submit(self, tokens: list[int], max_new_tokens: int = 32,
                sampling: SamplingParams = SamplingParams(greedy=True)) -> int:
+        if self.layout == "paged":
+            need = self.pc.pages_needed(len(tokens) + max_new_tokens)
+            if need > min(self.pc.max_pages, self.pc.num_pages):
+                raise ValueError(
+                    f"request needs {need} pages "
+                    f"(prompt {len(tokens)} + max_new {max_new_tokens} "
+                    f"tokens) but the pool can never provide more than "
+                    f"{min(self.pc.max_pages, self.pc.num_pages)}")
         rid = self._next_rid
         self._next_rid += 1
         self.sched.submit(Request(rid=rid, tokens=list(tokens),
@@ -127,7 +212,18 @@ class Engine:
                                   sampling=sampling, arrival=time.time()))
         return rid
 
+    def _sample_first(self, logits, req: Request) -> int:
+        """Sample the first generated token from the prefill logits."""
+        self.rng, k = jax.random.split(self.rng)
+        return int(sample(logits, k, req.sampling)[0])
+
     def _admit(self, finished: list[Finished]):
+        if self.layout == "paged":
+            self._admit_paged(finished)
+        else:
+            self._admit_slot(finished)
+
+    def _admit_slot(self, finished: list[Finished]):
         for req in self.sched.admit(self.slots.num_free):
             slot = self.slots.alloc()
             assert slot is not None
@@ -151,17 +247,59 @@ class Engine:
                                                 slot_idx)
             self.slots.seq_lens = self.slots.seq_lens.at[slot].set(sub_lens[0])
             self.stats.prefill_tokens += len(req.tokens)
-            # sample the first generated token from the prefill logits
-            self.rng, k = jax.random.split(self.rng)
-            tok = int(sample(logits, k, req.sampling)[0])
+            tok = self._sample_first(logits, req)
             a.t_first_token = time.time()
             a.output.append(tok)
             if tok == self.eos_id or len(a.output) >= req.max_new_tokens:
                 self._finish(slot, finished)
 
-    def _finish(self, slot: int, finished: list[Finished]):
-        a = self.sched.retire(slot)
-        self.slots.free(slot)
+    def _reserve_paged(self, req: Request) -> bool:
+        """Admission policy for ``Scheduler.admit``: reserve the request's
+        whole prompt+decode page footprint (minus prefix-cache hits) and a
+        block-table row, or defer.  The request's own full prompt pages are
+        registered in the prefix cache immediately: admission and prefill run
+        FCFS within one ``_admit_paged`` pass, so a later request admitted in
+        the same pass can hit these pages — their KV is written (donor
+        prefill precedes follower prefill) before anything reads them."""
+        if not self.pc.alloc_seq(req.rid, len(req.tokens), tokens=req.tokens,
+                                 reserve=req.max_new_tokens):
+            return False
+        self.pc.register_prefix(req.rid, req.tokens)
+        return True
+
+    def _admit_paged(self, finished: list[Finished]):
+        pc = self.pc
+        for req in self.sched.admit(self._reserve_paged):
+            row = pc.row_of(req.rid)
+            a = self.sched.activate(req, row)
+            hit_pages = pc.prefix_hits.get(req.rid, 0)
+            hit_tokens = hit_pages * pc.page_size
+            suffix = req.tokens[hit_tokens:]
+            # bucketed suffix prefill against the reused prefix pages
+            blen = bucket_len(len(suffix))
+            toks = np.zeros((1, blen), np.int32)
+            toks[0, :len(suffix)] = suffix
+            row_bt = self.pc.block_tables[row][None]
+            seq_start = jnp.full((1,), hit_tokens, jnp.int32)
+            logits, self.cache, new_lens = self._prefill_paged(
+                self.params, jnp.asarray(toks), len(suffix), self.cache,
+                seq_start, row_bt)
+            pc.seq_lens = pc.seq_lens.at[row].set(new_lens[0])
+            self.stats.prefill_tokens += len(suffix)
+            self.stats.prefix_hit_pages += hit_pages
+            self.stats.prefix_hit_tokens += hit_tokens
+            tok = self._sample_first(logits, req)
+            a.t_first_token = time.time()
+            a.output.append(tok)
+            if tok == self.eos_id or len(a.output) >= req.max_new_tokens:
+                self._finish(row, finished)
+
+    def _finish(self, row: int, finished: list[Finished]):
+        a = self.sched.retire(row)
+        if self.layout == "paged":
+            self.pc.free_seq(a.req.rid)
+        else:
+            self.slots.free(row)
         finished.append(Finished(
             rid=a.req.rid, prompt_len=len(a.req.tokens), output=a.output,
             arrival=a.req.arrival, t_first_token=a.t_first_token,
@@ -173,23 +311,23 @@ class Engine:
         self._admit(finished)
         if not self.sched.active:
             return finished
-        # host-side staging: last tokens + per-slot sampling arrays (numpy,
+        # host-side staging: last tokens + per-row sampling arrays (numpy,
         # no device round-trips)
-        bs = self.slots.batch_slots
+        bs = self.batch_rows
         tokens = np.zeros((bs, 1), np.int32)
         live = np.zeros((bs,), np.bool_)
         greedy = np.ones((bs,), np.bool_)
         temps = np.ones((bs,), np.float32)
         top_ks = np.zeros((bs,), np.int32)
         top_ps = np.ones((bs,), np.float32)
-        for slot, a in self.sched.active.items():
+        for row, a in self.sched.active.items():
             sp = a.req.sampling
-            tokens[slot, 0] = a.output[-1] if a.output else a.req.tokens[-1]
-            live[slot] = True
-            greedy[slot] = sp.greedy or sp.temperature == 0.0
-            temps[slot] = sp.temperature if sp.temperature > 0.0 else 1.0
-            top_ks[slot] = sp.top_k
-            top_ps[slot] = sp.top_p
+            tokens[row, 0] = a.output[-1] if a.output else a.req.tokens[-1]
+            live[row] = True
+            greedy[row] = sp.greedy or sp.temperature == 0.0
+            temps[row] = sp.temperature if sp.temperature > 0.0 else 1.0
+            top_ks[row] = sp.top_k
+            top_ps[row] = sp.top_p
         all_greedy = bool(greedy.all())
         if all_greedy:
             # argmax-only trace: no rng consumption, no sampling operands
@@ -199,10 +337,19 @@ class Engine:
             samp = (jnp.asarray(greedy), jnp.asarray(temps),
                     jnp.asarray(top_ks), jnp.asarray(top_ps),
                     jax.random.split(sub, bs))
-        toks_dev, self.slots.cache, self.slots.seq_lens = self._decode(
-            self.params, jnp.asarray(tokens), self.slots.cache,
-            self.slots.seq_lens, jnp.asarray(live), *samp,
-            all_greedy=all_greedy)
+        if self.layout == "paged":
+            pc = self.pc
+            toks_dev, self.cache, pc.seq_lens = self._decode(
+                self.params, jnp.asarray(tokens), self.cache, pc.seq_lens,
+                pc.block_tables, jnp.asarray(live), *samp,
+                all_greedy=all_greedy)
+            for row, a in self.sched.active.items():
+                pc.lengths[a.req.rid] += 1   # host mirror of device seq_lens
+        else:
+            toks_dev, self.slots.cache, self.slots.seq_lens = self._decode(
+                self.params, jnp.asarray(tokens), self.slots.cache,
+                self.slots.seq_lens, None, jnp.asarray(live), *samp,
+                all_greedy=all_greedy)
         # the single device->host transfer of the decode loop
         toks = jax.device_get(toks_dev).tolist()
         self.stats.tokens_generated += int(live.sum())

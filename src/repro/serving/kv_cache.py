@@ -1,33 +1,49 @@
 """Serving cache managers.
 
-Two layouts (DESIGN.md §2 — hardware adaptation of vLLM's PagedAttention):
+Two layouts (DESIGN.md §2, §10 — hardware adaptation of vLLM's
+PagedAttention):
 
-* ``SlotCache`` — TPU path: the model's native slot-based contiguous cache
-  (fixed max_len per decode slot). Slot allocation/free is O(1); the jitted
-  decode step is shape-stable. This is what JetStream-style TPU serving does
-  instead of paging.
+* ``SlotCache`` — the model's native slot-based contiguous cache (fixed
+  max_len per decode slot). Slot allocation/free is O(1); the jitted decode
+  step is shape-stable. This is what JetStream-style TPU serving does
+  instead of paging, and it remains the engine default.
 
-* ``PagedCache`` — CPU-engine option faithful to the paper's vLLM substrate:
-  block tables mapping logical token blocks to a shared physical page pool,
-  with copy-free sharing of common prefixes and page-level free lists.
+* ``PagedCache`` — device-resident block-table KV pool: fixed-size physical
+  pages shared across sequences, a ``(max_seqs, max_pages)`` int32 device
+  block table consumed directly by the Pallas paged-attention decode kernel
+  (``kernels/paged_attention.py``), refcounted free lists with
+  copy-on-write on shared-page writes, and a hashed-prefix cache that
+  reuses full pages across requests with identical prompt prefixes.
+
+Physical page 0 is the **null page**: never allocated, permanently
+refcounted, the target of block-table padding and of dead decode rows'
+writes.  ``num_pages`` counts *allocatable* pages, so pool arrays hold
+``num_pages + 1`` physical pages.
 """
 from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
+
+# The single source of the serving cache dtype: SlotCache, PagedCache and
+# Engine all default to this (the seed had SlotCache default to bfloat16
+# while Engine passed float32 — two defaults, one of them dead).
+DEFAULT_CACHE_DTYPE = jnp.float32
+
+NULL_PAGE = 0
 
 
 class SlotCache:
     """Fixed-slot cache wrapper around the model's init_cache tree."""
 
     def __init__(self, model, batch_slots: int, max_len: int,
-                 dtype=jnp.bfloat16):
+                 dtype=DEFAULT_CACHE_DTYPE):
         self.model = model
         self.batch_slots = batch_slots
         self.max_len = max_len
+        self.dtype = jnp.dtype(dtype)
         self.cache = model.init_cache(batch_slots, max_len, dtype=dtype)
         self.seq_lens = jnp.zeros((batch_slots,), jnp.int32)
         self._free = list(range(batch_slots))[::-1]
@@ -53,27 +69,54 @@ class SlotCache:
 
 @dataclasses.dataclass
 class PagedCache:
-    """Block-table KV pool (numpy bookkeeping; pages are jnp arrays).
+    """Block-table KV pool with a device-resident block table.
 
-    pages[layer]: (num_pages, page_size, Hkv, D) x2 (k, v)
-    block_table : seq_id -> list of page ids (+ ref counts for prefix sharing)
+    k_pages/v_pages: (n_layers, num_pages + 1, page_size, Hkv, D) pools.
+    block_tables   : (max_seqs, max_pages) int32 device array; row ``r`` maps
+                     sequence-in-row-r logical page ``i`` to a physical page.
+    Host bookkeeping (free list, refcounts, per-seq tables, prefix hashes)
+    stays in plain Python/numpy; only page payloads and the block table are
+    device arrays.
     """
     num_pages: int
     page_size: int
     n_layers: int
     kv_heads: int
     head_dim: int
-    dtype: object = jnp.bfloat16
+    dtype: object = None            # None -> DEFAULT_CACHE_DTYPE
+    max_seqs: int = 0               # 0 -> num_pages (every seq needs >=1 page)
+    max_pages: int = 0              # block-table width; 0 -> num_pages
+    alloc_pools: bool = True        # False: bookkeeping only — the engine
+                                    # stores page payloads in the model cache
+                                    # tree (init_paged_cache), not here
 
     def __post_init__(self):
-        shape = (self.n_layers, self.num_pages, self.page_size,
+        self.dtype = jnp.dtype(self.dtype if self.dtype is not None
+                               else DEFAULT_CACHE_DTYPE)
+        self.max_seqs = self.max_seqs or self.num_pages
+        self.max_pages = self.max_pages or self.num_pages
+        shape = (self.n_layers, self.num_pages + 1, self.page_size,
                  self.kv_heads, self.head_dim)
-        self.k_pages = jnp.zeros(shape, self.dtype)
-        self.v_pages = jnp.zeros(shape, self.dtype)
-        self.free_list = list(range(self.num_pages))[::-1]
+        if self.alloc_pools:
+            self.k_pages = jnp.zeros(shape, self.dtype)
+            self.v_pages = jnp.zeros(shape, self.dtype)
+        else:
+            self.k_pages = self.v_pages = None
+        self.seq_lens = jnp.zeros((self.max_seqs,), jnp.int32)
+        # pop() order 1, 2, 3, ...; page 0 is the never-allocated null page
+        self.free_list = list(range(self.num_pages, 0, -1))
         self.tables: dict[int, list[int]] = {}
         self.lengths: dict[int, int] = {}
-        self.refcount = np.zeros(self.num_pages, np.int32)
+        self.refcount = np.zeros(self.num_pages + 1, np.int32)
+        self.refcount[NULL_PAGE] = np.iinfo(np.int32).max // 2   # pinned
+        self.block_tables = jnp.zeros((self.max_seqs, self.max_pages),
+                                      jnp.int32)
+        self.rows: dict[int, int] = {}
+        self._free_rows = list(range(self.max_seqs))[::-1]
+        # hashed-prefix cache: chain-hash of page-aligned token prefixes
+        self._prefix_index: dict[int, int] = {}      # hash key -> page id
+        self._page_key: dict[int, int] = {}          # page id -> hash key
+        self.prefix_hits: dict[int, int] = {}        # seq_id -> pages reused
 
     # ------------------------------------------------------------ bookkeeping
     def pages_needed(self, n_tokens: int) -> int:
@@ -82,41 +125,95 @@ class PagedCache:
     def can_alloc(self, n_tokens: int) -> bool:
         return len(self.free_list) >= self.pages_needed(n_tokens)
 
+    @property
+    def utilization(self) -> float:
+        return 1.0 - len(self.free_list) / self.num_pages
+
+    def row_of(self, seq_id: int) -> int:
+        return self.rows[seq_id]
+
+    def _sync_row(self, seq_id: int):
+        """Push one sequence's host table into the device block table."""
+        row = self.rows[seq_id]
+        arr = np.full((self.max_pages,), NULL_PAGE, np.int32)
+        table = self.tables[seq_id]
+        arr[:len(table)] = table
+        self.block_tables = self.block_tables.at[row].set(jnp.asarray(arr))
+
+    def _prefix_keys(self, tokens) -> list[int]:
+        """Chain hashes of each full-page-aligned prefix of ``tokens``."""
+        keys, key = [], 0
+        for i in range(len(tokens) // self.page_size):
+            page = tuple(tokens[i * self.page_size:(i + 1) * self.page_size])
+            key = hash((key, page))
+            keys.append(key)
+        return keys
+
     def alloc_seq(self, seq_id: int, n_tokens: int,
-                  share_from: int | None = None) -> bool:
-        """Allocate pages for a sequence; optionally share a common prefix
-        (copy-on-write refcounting, the PagedAttention trick)."""
+                  share_from: int | None = None,
+                  tokens=None, reserve: int = 0) -> bool:
+        """Allocate pages (and a block-table row) for a sequence.
+
+        Prefix reuse, in priority order: ``share_from`` (explicit donor —
+        full pages of the donor's table are refcounted in), else ``tokens``
+        (the prompt ids) consults the hashed-prefix cache.  ``reserve``
+        tokens of extra page capacity are allocated up front (the engine
+        reserves the decode budget at admission so generation can never hit
+        pool exhaustion mid-flight).  Returns False — with no state change —
+        when pages or rows are unavailable.
+        """
+        if seq_id in self.tables:
+            raise ValueError(f"seq {seq_id} already allocated")
         pages: list[int] = []
         shared = 0
         if share_from is not None and share_from in self.tables:
             src = self.tables[share_from]
             shared = min(len(src), n_tokens // self.page_size)
-            for p in src[:shared]:
-                self.refcount[p] += 1
-                pages.append(p)
-        need = self.pages_needed(n_tokens) - shared
-        if len(self.free_list) < need:
-            for p in pages:
-                self.refcount[p] -= 1
+            pages = src[:shared]
+        elif tokens is not None:
+            # at least one suffix token must remain to prefill logits from
+            keys = self._prefix_keys(tokens)[:(n_tokens - 1) // self.page_size]
+            for key in keys:
+                page = self._prefix_index.get(key)
+                if page is None or self.refcount[page] <= 0:
+                    break
+                pages.append(page)
+            shared = len(pages)
+        need = self.pages_needed(n_tokens + reserve) - shared
+        if (need > len(self.free_list) or not self._free_rows
+                or self.pages_needed(n_tokens + reserve) > self.max_pages):
             return False
+        pages = list(pages)               # never alias a donor's table
+        for p in pages:
+            self.refcount[p] += 1
         for _ in range(need):
             p = self.free_list.pop()
             self.refcount[p] += 1
             pages.append(p)
         self.tables[seq_id] = pages
         self.lengths[seq_id] = n_tokens
+        self.rows[seq_id] = self._free_rows.pop()
+        if tokens is not None and share_from is None:
+            self.prefix_hits[seq_id] = shared
+        self._sync_row(seq_id)
         return True
 
     def extend_seq(self, seq_id: int, n_new: int = 1) -> bool:
-        length = self.lengths[seq_id] + n_new
+        old = self.lengths[seq_id]
+        length = old + n_new
         need = self.pages_needed(length) - len(self.tables[seq_id])
         if need > 0:
-            if len(self.free_list) < need:
+            if (len(self.free_list) < need
+                    or self.pages_needed(length) > self.max_pages):
                 return False
             for _ in range(need):
                 p = self.free_list.pop()
                 self.refcount[p] += 1
                 self.tables[seq_id].append(p)
+            self._sync_row(seq_id)
+        # growing into a shared partially-filled page must trigger COW now,
+        # before any write lands at positions [old, length)
+        self._ensure_writable(seq_id, old, length)
         self.lengths[seq_id] = length
         return True
 
@@ -125,29 +222,121 @@ class PagedCache:
             self.refcount[p] -= 1
             if self.refcount[p] == 0:
                 self.free_list.append(p)
+                key = self._page_key.pop(p, None)
+                if key is not None and self._prefix_index.get(key) == p:
+                    del self._prefix_index[key]
         self.lengths.pop(seq_id, None)
+        self.prefix_hits.pop(seq_id, None)
+        row = self.rows.pop(seq_id, None)
+        if row is not None:
+            self._free_rows.append(row)
+            self.block_tables = self.block_tables.at[row].set(
+                jnp.zeros((self.max_pages,), jnp.int32))
+            self.seq_lens = self.seq_lens.at[row].set(0)
 
-    @property
-    def utilization(self) -> float:
-        return 1.0 - len(self.free_list) / self.num_pages
+    # ------------------------------------------------------------ prefix cache
+    def register_prefix(self, seq_id: int, tokens):
+        """Publish this sequence's full, written pages to the prefix cache
+        (call after the prompt KV has actually been written)."""
+        table = self.tables[seq_id]
+        for i, key in enumerate(self._prefix_keys(tokens)):
+            page = table[i]
+            # page -> key stays injective: a page already published under a
+            # key keeps it (re-keying would leak the old entry at eviction)
+            if key not in self._prefix_index and page not in self._page_key:
+                self._prefix_index[key] = page
+                self._page_key[page] = key
 
     # -------------------------------------------------------------- data path
+    def _require_pools(self):
+        if self.k_pages is None:
+            raise RuntimeError(
+                "PagedCache(alloc_pools=False) is bookkeeping-only: page "
+                "payloads live in the engine's model cache tree, not here")
+
+    def _ensure_writable(self, seq_id: int, start: int, end: int):
+        """Copy-on-write: any page covering [start, end) that is shared
+        (refcount > 1) is replaced by a private copy before writes land."""
+        if end <= start:
+            return
+        table = self.tables[seq_id]
+        dirty = False
+        try:
+            for li in range(start // self.page_size,
+                            (end - 1) // self.page_size + 1):
+                p = table[li]
+                if self.refcount[p] > 1:
+                    # engine flow shares only full, never-rewritten prefix
+                    # pages, so COW is unreachable with alloc_pools=False
+                    self._require_pools()
+                    if not self.free_list:
+                        raise RuntimeError(
+                            "page pool exhausted during copy-on-write")
+                    q = self.free_list.pop()
+                    self.k_pages = self.k_pages.at[:, q].set(
+                        self.k_pages[:, p])
+                    self.v_pages = self.v_pages.at[:, q].set(
+                        self.v_pages[:, p])
+                    self.refcount[p] -= 1
+                    self.refcount[q] += 1
+                    table[li] = q
+                    dirty = True
+        finally:
+            # a partial COW (pool exhausted mid-loop) must still publish the
+            # pages it did remap, or the device table would alias stale pages
+            if dirty:
+                self._sync_row(seq_id)
+
     def write_tokens(self, seq_id: int, layer: int, start: int,
                      k: jnp.ndarray, v: jnp.ndarray):
-        """k, v: (n, Hkv, D) written at logical positions [start, start+n)."""
-        table = self.tables[seq_id]
+        """k, v: (n, Hkv, D) written at logical positions [start, start+n).
+
+        One batched scatter per (layer, call) — the seed's per-token
+        ``.at[page, off].set()`` Python loop dispatched O(n) device ops.
+        Shared pages are copy-on-write-resolved first.
+        """
+        self._require_pools()
         n = k.shape[0]
-        for i in range(n):
-            pos = start + i
-            page = table[pos // self.page_size]
-            off = pos % self.page_size
-            self.k_pages = self.k_pages.at[layer, page, off].set(
-                k[i].astype(self.dtype))
-            self.v_pages = self.v_pages.at[layer, page, off].set(
-                v[i].astype(self.dtype))
+        self._ensure_writable(seq_id, start, start + n)
+        table = np.asarray(self.tables[seq_id], np.int32)
+        pos = np.arange(start, start + n)
+        pages = jnp.asarray(table[pos // self.page_size])
+        offs = jnp.asarray(pos % self.page_size)
+        self.k_pages = self.k_pages.at[layer, pages, offs].set(
+            k.astype(self.dtype))
+        self.v_pages = self.v_pages.at[layer, pages, offs].set(
+            v.astype(self.dtype))
+
+    def write_prefill(self, seq_id: int, start: int,
+                      k: jnp.ndarray, v: jnp.ndarray):
+        """All-layer prefill write: k, v (n_layers, n, Hkv, D) at logical
+        positions [start, start+n) — one scatter per pool for every layer."""
+        self._require_pools()
+        n = k.shape[1]
+        self._ensure_writable(seq_id, start, start + n)
+        table = np.asarray(self.tables[seq_id], np.int32)
+        pos = np.arange(start, start + n)
+        pages = jnp.asarray(table[pos // self.page_size])
+        offs = jnp.asarray(pos % self.page_size)
+        self.k_pages = self.k_pages.at[:, pages, offs].set(
+            k.astype(self.dtype))
+        self.v_pages = self.v_pages.at[:, pages, offs].set(
+            v.astype(self.dtype))
+
+    def write_decode_token(self, seq_id: int, k: jnp.ndarray, v: jnp.ndarray):
+        """Append one decode token's KV across every layer in one fused
+        scatter.  k, v: (n_layers, Hkv, D); the token lands at position
+        ``lengths[seq_id] - 1`` (call ``extend_seq`` first)."""
+        self._require_pools()
+        pos = self.lengths[seq_id] - 1
+        page = self.tables[seq_id][pos // self.page_size]
+        off = pos % self.page_size
+        self.k_pages = self.k_pages.at[:, page, off].set(k.astype(self.dtype))
+        self.v_pages = self.v_pages.at[:, page, off].set(v.astype(self.dtype))
 
     def gather_kv(self, seq_id: int, layer: int):
         """Returns (k, v): (len, Hkv, D) gathered via the block table."""
+        self._require_pools()
         table = jnp.asarray(self.tables[seq_id], jnp.int32)
         length = self.lengths[seq_id]
         k = self.k_pages[layer, table].reshape(-1, self.kv_heads, self.head_dim)

@@ -3,9 +3,8 @@ prefill lengths (bounded jit recompiles), per-request latency accounting."""
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
-from typing import Any
+from typing import Callable, Union
 
 from repro.serving.sampler import SamplingParams
 
@@ -65,11 +64,25 @@ class Scheduler:
     def submit(self, req: Request):
         self.waiting.append(req)
 
-    def admit(self, num_free_slots: int) -> list[Request]:
+    def admit(self, budget: Union[int, Callable[[Request], bool]]
+              ) -> list[Request]:
+        """FCFS admission under a resource budget.
+
+        ``budget`` is either a free-slot count (the slot-cache path) or a
+        reservation policy called on the queue head — it commits resources
+        (pages + a block-table row in the paged path) and returns whether the
+        request was admitted.  FCFS is strict: the first request that does
+        not fit stops admission (no skipping), so exhaustion defers rather
+        than reorders.
+        """
         out = []
-        while self.waiting and num_free_slots > 0:
-            out.append(self.waiting.popleft())
-            num_free_slots -= 1
+        if callable(budget):
+            while self.waiting and budget(self.waiting[0]):
+                out.append(self.waiting.popleft())
+        else:
+            while self.waiting and budget > 0:
+                out.append(self.waiting.popleft())
+                budget -= 1
         return out
 
     def activate(self, req: Request, slot: int) -> Active:

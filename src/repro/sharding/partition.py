@@ -11,10 +11,8 @@ fall back to TP inside experts (grok: 8 experts on a 16-way axis would pad).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 

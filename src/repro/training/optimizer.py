@@ -7,7 +7,6 @@ inherits each parameter's sharding, so m/v are fully distributed).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

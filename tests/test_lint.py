@@ -1,0 +1,84 @@
+"""Dead-import lint gate (ISSUE 2 satellite).
+
+Runs ``pyflakes`` over ``src/`` when it is installed (``pip install -r
+requirements-dev.txt``).  Otherwise falls back to a minimal AST-based
+unused-import check (imports bound at module level that are never referenced
+as a load anywhere in the module) so the gate still bites in dependency-free
+environments.  Lines carrying ``# noqa`` are exempt in both modes.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "src")
+
+
+def _have_pyflakes() -> bool:
+    try:
+        import pyflakes  # noqa: F401
+        return True
+    except ImportError:
+        return False
+
+
+def _unused_imports(path: str) -> list[str]:
+    with open(path) as f:
+        source = f.read()
+    tree = ast.parse(source, filename=path)
+    noqa_lines = {i + 1 for i, line in enumerate(source.splitlines())
+                  if "# noqa" in line}
+    imported: dict[str, int] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                name = a.asname or a.name.split(".")[0]
+                imported[name] = node.lineno
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                imported[a.asname or a.name] = node.lineno
+    used: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            n = node
+            while isinstance(n, ast.Attribute):
+                n = n.value
+            if isinstance(n, ast.Name):
+                used.add(n.id)
+    exported = set()
+    for node in tree.body:     # __all__ re-exports
+        if (isinstance(node, ast.Assign) and node.targets
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == "__all__"):
+            exported |= {getattr(e, "value", None)
+                         for e in getattr(node.value, "elts", [])}
+    return [f"{path}:{line}: unused import {name!r}"
+            for name, line in sorted(imported.items(), key=lambda kv: kv[1])
+            if name not in used and name not in exported
+            and line not in noqa_lines]
+
+
+def test_src_has_no_dead_imports():
+    if _have_pyflakes():
+        proc = subprocess.run(
+            [sys.executable, "-m", "pyflakes", SRC],
+            capture_output=True, text=True)
+        offending = [l for l in proc.stdout.splitlines()
+                     if "imported but unused" in l]
+        assert not offending, "\n".join(offending)
+        return
+    problems: list[str] = []
+    for dirpath, _dirs, files in os.walk(SRC):
+        for fn in files:
+            if fn.endswith(".py") and fn != "__init__.py":
+                problems += _unused_imports(os.path.join(dirpath, fn))
+    assert not problems, "\n".join(problems)

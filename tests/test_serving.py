@@ -94,7 +94,11 @@ def test_engine_fused_step_matches_unfused_reference(small_lm):
         eng.submit(rng.integers(2, cfg.vocab_size, size=plen).tolist(),
                    max_new_tokens=4, sampling=sp)
     eng._admit([])                        # prefill all three into their slots
-    cache0, lens0, rng0 = eng.slots.cache, eng.slots.seq_lens, eng.rng
+    # deep-copy the snapshot: the engine donates its cache buffers into the
+    # jitted step (on backends with donation), so the live tree is invalid
+    # as a reference input after eng.step()
+    cache0 = jax.tree_util.tree_map(jnp.copy, eng.slots.cache)
+    lens0, rng0 = jnp.copy(eng.slots.seq_lens), eng.rng
     last = {s: a.output[-1] for s, a in eng.sched.active.items()}
 
     eng.step()
