@@ -66,6 +66,7 @@ def measured_engine_throughput(n_requests: int = 6, max_new: int = 4):
     from repro.core.quantize_model import quantize_params
     from repro.models import build_model
     from repro.models import layers as L
+    from repro.serving.api import EngineConfig
     from repro.serving.engine import Engine
 
     cfg = smoke_config("qwen3_4b")
@@ -77,8 +78,8 @@ def measured_engine_throughput(n_requests: int = 6, max_new: int = 4):
     for s in ["baseline", "opt4gptq"]:
         kern = L.KernelConfig(strategy=STRATEGIES[s], use_pallas=True,
                               block_sizes=(8, 64, 64))
-        eng = Engine(model, qparams, batch_slots=4, max_len=64,
-                     kernels=kern, eos_id=-1)
+        eng = Engine(model, qparams, EngineConfig(
+            batch_slots=4, max_len=64, kernels=kern, eos_id=-1))
         for _ in range(n_requests):
             eng.submit(rng.integers(2, cfg.vocab_size, size=8).tolist(),
                        max_new_tokens=max_new)

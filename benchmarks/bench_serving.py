@@ -1,0 +1,93 @@
+"""Request-level serving benchmark (ISSUE 3): ttft / tpot / throughput
+percentiles for the slot vs paged cache layouts, measured through the
+streaming request-lifecycle API (``Engine.generate`` over a ShareGPT-like
+synthetic workload — the same statistics the paper's vLLM runs sample).
+
+Interpret-mode wall-clock on CPU: the numbers validate the serving harness
+and track the *relative* slot-vs-paged trajectory across PRs, not TPU
+performance.  Emits CSV lines through benchmarks/run.py and writes the
+structured record to BENCH_serving.json at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core.gptq import GPTQConfig
+from repro.core.opt_strategies import OPT4GPTQ
+from repro.core.quantize_model import quantize_params
+from repro.data.pipeline import sharegpt_stream
+from repro.models import build_model
+from repro.models import layers as L
+from repro.serving.api import EngineConfig
+from repro.serving.engine import Engine
+
+N_REQUESTS = 8
+MAX_NEW = 6
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         os.pardir, "BENCH_serving.json")
+
+
+def _pct(xs, unit=1.0) -> dict:
+    if not xs:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    return {p: float(np.percentile(xs, q)) * unit
+            for p, q in (("p50", 50), ("p95", 95), ("p99", 99))}
+
+
+def run():
+    cfg = smoke_config("qwen3_4b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    qparams = quantize_params(params, None, GPTQConfig(group_size=32))
+    kern = L.KernelConfig(strategy=OPT4GPTQ, use_pallas=True,
+                          block_sizes=(8, 64, 64))
+    reqs = sharegpt_stream(N_REQUESTS, vocab_size=cfg.vocab_size, seed=0,
+                           mean_prompt=10, mean_output=MAX_NEW,
+                           max_prompt=48)
+    prompts = [r.prompt for r in reqs]
+
+    lines, records = [], []
+    for layout in ("slot", "paged"):
+        eng = Engine(model, qparams, EngineConfig(
+            batch_slots=4, max_len=128, kernels=kern, eos_id=-1,
+            cache=layout, page_size=16))
+        t0 = time.time()
+        outs = eng.generate(prompts, max_new_tokens=MAX_NEW, ignore_eos=True)
+        dt = time.time() - t0
+        toks = sum(len(o.output) for o in outs)
+        ttft = _pct([o.ttft for o in outs])
+        tpot = _pct([o.tpot for o in outs if o.tpot > 0])
+        lat = _pct([o.latency for o in outs])
+        rec = {"layout": layout, "requests": len(outs), "tokens": toks,
+               "wall_s": dt, "tok_per_s_interpret": toks / dt if dt else 0.0,
+               "ttft_s": ttft, "tpot_s": tpot, "latency_s": lat,
+               "finish_reasons": sorted({o.finish_reason.value
+                                         for o in outs})}
+        if layout == "paged":
+            rec["prefix_hit_pages"] = eng.stats.prefix_hit_pages
+            rec["prefix_hit_tokens"] = eng.stats.prefix_hit_tokens
+        records.append(rec)
+        lines.append(
+            f"serving/{layout},{dt * 1e6 / max(toks, 1):.0f},"
+            f"reqs={len(outs)}|toks={toks}|"
+            f"tok_per_s={rec['tok_per_s_interpret']:.2f}|"
+            f"ttft_p50_s={ttft['p50']:.3f}|ttft_p99_s={ttft['p99']:.3f}|"
+            f"tpot_p50_s={tpot['p50']:.3f}|lat_p99_s={lat['p99']:.3f}")
+    try:
+        with open(JSON_PATH, "w") as f:
+            json.dump(records, f, indent=1)
+        lines.append(f"serving/json,0,written={os.path.abspath(JSON_PATH)}")
+    except OSError as e:
+        lines.append(f"serving/json,0,ERROR={e!r}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -6,6 +6,9 @@ Prints ``name,us_per_call,derived`` CSV lines.
   kernels   : bench_kernels     (per-strategy micro costs + decode fast lane;
                                  writes BENCH_kernels.json for the perf
                                  trajectory across PRs)
+  serving   : bench_serving     (request-level ttft/tpot/throughput
+                                 percentiles, slot vs paged; writes
+                                 BENCH_serving.json)
   roofline  : roofline_table    (dry-run derived roofline per cell)
 
 ``--sections kernels,roofline`` runs a subset (default: all).
@@ -19,16 +22,18 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--sections", default="all",
                     help="comma-separated subset of "
-                         "kernels,paper_figs,accuracy,roofline (default all)")
+                         "kernels,paper_figs,accuracy,serving,roofline "
+                         "(default all)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     from benchmarks import bench_kernels, bench_paper_figs, bench_accuracy, \
-        roofline_table
+        bench_serving, roofline_table
     sections = [
         ("kernels", bench_kernels.run),
         ("paper_figs", bench_paper_figs.run),
         ("accuracy", bench_accuracy.run),
+        ("serving", bench_serving.run),
         ("roofline", roofline_table.run),
     ]
     if args.sections != "all":

@@ -13,6 +13,7 @@ from repro.core.opt_strategies import OPT4GPTQ
 from repro.core.quantize_model import quantize_params
 from repro.models import build_model
 from repro.models import layers as L
+from repro.serving.api import EngineConfig
 from repro.serving.engine import Engine
 
 
@@ -34,15 +35,15 @@ def main():
     # 3. serve with continuous batching + the Opt4GPTQ Pallas kernel
     kernels = L.KernelConfig(strategy=OPT4GPTQ, use_pallas=True,
                              block_sizes=(8, 64, 64))
-    eng = Engine(model, qparams, batch_slots=4, max_len=64, kernels=kernels,
-                 eos_id=-1)
+    eng = Engine(model, qparams, EngineConfig(
+        batch_slots=4, max_len=64, kernels=kernels, eos_id=-1))
     rng = np.random.default_rng(0)
-    for n in (5, 9, 3):
-        eng.submit(rng.integers(2, cfg.vocab_size, size=n).tolist(),
-                   max_new_tokens=8)
-    done = eng.run()
+    prompts = [rng.integers(2, cfg.vocab_size, size=n).tolist()
+               for n in (5, 9, 3)]
+    done = eng.generate(prompts, max_new_tokens=8)
     for f in sorted(done, key=lambda f: f.rid):
-        print(f"request {f.rid}: prompt_len={f.prompt_len} -> {f.output}")
+        print(f"request {f.rid}: prompt_len={f.prompt_len} -> {f.output} "
+              f"({f.finish_reason.value}, ttft {f.ttft * 1e3:.0f}ms)")
     print(f"generated {eng.stats.tokens_generated} tokens in "
           f"{eng.stats.steps} engine steps")
 

@@ -2,7 +2,7 @@
 continuous batching — the paper's vLLM workload in miniature — and compare
 kernel strategies end to end.
 
-  PYTHONPATH=src python examples/serve_gptq.py [--requests 10]
+  PYTHONPATH=src python examples/serve_gptq.py [--requests 10] [--arch qwen3_4b]
 """
 import argparse
 import time
@@ -17,12 +17,13 @@ from repro.core.quantize_model import quantize_params
 from repro.data.pipeline import sharegpt_stream
 from repro.models import build_model
 from repro.models import layers as L
+from repro.serving.api import EngineConfig
 from repro.serving.engine import Engine
 from repro.serving.sampler import SamplingParams
 
 
-def main(n_requests: int = 10):
-    cfg = smoke_config("llama3_8b") if False else smoke_config("qwen3_4b")
+def main(n_requests: int = 10, arch: str = "qwen3_4b"):
+    cfg = smoke_config(arch)
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
     qparams = quantize_params(params, None, GPTQConfig(group_size=32))
@@ -32,8 +33,8 @@ def main(n_requests: int = 10):
     for strat in ("baseline", "opt4gptq"):
         kern = L.KernelConfig(strategy=STRATEGIES[strat], use_pallas=True,
                               block_sizes=(8, 64, 64))
-        eng = Engine(model, qparams, batch_slots=4, max_len=128,
-                     kernels=kern, eos_id=-1)
+        eng = Engine(model, qparams, EngineConfig(
+            batch_slots=4, max_len=128, kernels=kern, eos_id=-1))
         t0 = time.time()
         for r in stream:
             eng.submit(r.prompt, max_new_tokens=r.output_len,
@@ -42,10 +43,16 @@ def main(n_requests: int = 10):
         dt = time.time() - t0
         toks = sum(len(f.output) for f in done)
         lat = [f.latency for f in done]
+        ttft = [f.ttft for f in done]
+        # single-token outputs have no decode phase -> no tpot sample
+        tpot = [f.tpot for f in done if f.tpot > 0]
+        tpot_ms = np.percentile(tpot, 50) * 1e3 if tpot else 0.0
         print(f"[{strat:9s}] {len(done)} reqs | {toks} tokens | "
               f"{toks / dt:7.2f} tok/s (interpret) | "
               f"p50 latency {np.percentile(lat, 50):.2f}s "
-              f"p99 {np.percentile(lat, 99):.2f}s")
+              f"p99 {np.percentile(lat, 99):.2f}s | "
+              f"p50 ttft {np.percentile(ttft, 50):.2f}s "
+              f"p50 tpot {tpot_ms:.0f}ms")
     print("note: interpret-mode wall time validates the harness; TPU "
           "performance comes from the analytic model (benchmarks).")
 
@@ -53,4 +60,8 @@ def main(n_requests: int = 10):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=10)
-    main(ap.parse_args().requests)
+    ap.add_argument("--arch", default="qwen3_4b",
+                    help="any registered arch (smoke-reduced), e.g. "
+                         "qwen3_4b, llama3_8b")
+    args = ap.parse_args()
+    main(args.requests, args.arch)

@@ -1,37 +1,29 @@
-"""Serving driver: GPTQ-quantize a model and run a request stream through the
-continuous-batching engine with a chosen kernel strategy.
+"""Serving driver: GPTQ-quantize a model and either run a synthetic request
+stream through the continuous-batching engine (offline mode, default) or
+expose it as an OpenAI-style HTTP service (``--serve``).
 
+  # offline throughput run
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_4b --smoke \
-      --requests 8 --strategy opt4gptq [--no-pallas]
+      --requests 8 --strategy opt4gptq [--no-pallas] [--cache paged]
+
+  # HTTP service: POST /v1/completions (token-id prompts, SSE streaming)
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3_4b --smoke \
+      --serve --port 8000
 """
 import argparse
 import time
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3_4b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--strategy", default="opt4gptq")
-    ap.add_argument("--no-pallas", action="store_true")
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--cache", choices=("slot", "paged"), default="slot",
-                    help="KV layout: fixed slots or PagedAttention block "
-                         "tables (DESIGN.md §10)")
-    ap.add_argument("--page-size", type=int, default=16)
-    args = ap.parse_args(argv)
-
+def build_engine(args):
+    """Model + quantization + engine from CLI args — shared by both modes."""
     import jax
 
     from repro.configs import get_config, smoke_config
     from repro.core.gptq import GPTQConfig
     from repro.core.opt_strategies import get_strategy
     from repro.core.quantize_model import quantize_params
-    from repro.data.pipeline import sharegpt_stream
     from repro.models import build_model, layers as L
+    from repro.serving.api import EngineConfig
     from repro.serving.engine import Engine
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -41,9 +33,15 @@ def main(argv=None):
     kern = L.KernelConfig(strategy=get_strategy(args.strategy),
                           use_pallas=not args.no_pallas,
                           block_sizes=(8, 64, 64))
-    eng = Engine(model, qparams, batch_slots=args.slots,
-                 max_len=args.max_len, kernels=kern, eos_id=-1,
-                 cache=args.cache, page_size=args.page_size)
+    eng = Engine(model, qparams, EngineConfig(
+        batch_slots=args.slots, max_len=args.max_len, kernels=kern,
+        eos_id=-1, cache=args.cache, page_size=args.page_size))
+    return cfg, eng
+
+
+def run_offline(args, cfg, eng):
+    from repro.data.pipeline import sharegpt_stream
+
     stream = sharegpt_stream(args.requests, vocab_size=cfg.vocab_size,
                              seed=0, mean_prompt=10, mean_output=args.max_new,
                              max_prompt=args.max_len // 2)
@@ -61,6 +59,52 @@ def main(argv=None):
     print(f"[serve] {cfg.name} x {args.strategy} [{args.cache}]: "
           f"{len(done)} reqs, {toks} tokens, {toks / dt:.2f} tok/s "
           f"(interpret), p50 {lat[len(lat) // 2]:.2f}s{extra}")
+
+
+def run_http(args, cfg, eng):
+    from repro.serving.http_api import make_server
+
+    server = make_server(eng, host=args.host, port=args.port,
+                         model_name=cfg.name)
+    print(f"[serve] {cfg.name} [{args.cache}] listening on "
+          f"http://{args.host}:{server.port}/v1/completions "
+          f"(SSE with \"stream\": true; prompts are token-id lists)",
+          flush=True)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.shutdown()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_4b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--strategy", default="opt4gptq")
+    ap.add_argument("--no-pallas", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--cache", choices=("slot", "paged"), default="slot",
+                    help="KV layout: fixed slots or PagedAttention block "
+                         "tables (DESIGN.md §10)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--serve", action="store_true",
+                    help="run the OpenAI-style /v1/completions HTTP "
+                         "front-end instead of the offline request stream")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="HTTP port for --serve (0 = ephemeral)")
+    args = ap.parse_args(argv)
+
+    cfg, eng = build_engine(args)
+    if args.serve:
+        run_http(args, cfg, eng)
+    else:
+        run_offline(args, cfg, eng)
 
 
 if __name__ == "__main__":

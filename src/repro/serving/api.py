@@ -1,0 +1,136 @@
+"""Public serving API types: the request lifecycle contract (DESIGN.md §11).
+
+One place defines what a serving request *is* — everything the engine, the
+HTTP front-end, the examples and the benchmarks previously re-derived from
+positional kwargs:
+
+* ``EngineConfig``     — the engine's construction surface (was 10 kwargs
+                         duplicated across launch/examples/benchmarks).
+* ``RequestState``     — QUEUED → PREFILL → RUNNING → FINISHED | ABORTED.
+* ``FinishReason``     — why generation ended (OpenAI-compatible values).
+* ``StreamEvent``      — one generated token of one request, as yielded by
+                         ``Engine.stream()``; terminal events carry the
+                         ``RequestOutput``.
+* ``RequestOutput``    — a completed (or aborted) request with per-request
+                         latency metrics (ttft / tpot / e2e latency).
+
+``RequestOutput`` is the same record the pre-redesign engine returned as
+``scheduler.Finished`` (kept as an alias there), extended with
+``finish_reason``/``state`` — old callers keep working unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+from repro.models import layers as L
+
+
+class RequestState(str, enum.Enum):
+    """Lifecycle of one serving request inside the engine."""
+    QUEUED = "queued"        # submitted, waiting for slot/page admission
+    PREFILL = "prefill"      # admitted; prompt KV being written
+    RUNNING = "running"      # decoding, first token already produced
+    FINISHED = "finished"    # completed via stop token / eos / length
+    ABORTED = "aborted"      # cancelled via Engine.abort()
+
+
+class FinishReason(str, enum.Enum):
+    """Why a request stopped — values match the OpenAI completions API."""
+    STOP = "stop"            # eos (unless ignore_eos) or a stop_token_id
+    LENGTH = "length"        # hit max_new_tokens
+    ABORT = "abort"          # Engine.abort() mid-flight or while queued
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Single-sourced engine construction config.
+
+    Every field previously travelled as an ``Engine.__init__`` kwarg,
+    re-spelled independently by ``launch/serve.py``, both serving examples
+    and the benchmarks.  ``Engine(model, params, EngineConfig(...))`` is the
+    supported spelling; the old kwargs remain as a deprecated shim.
+    """
+    batch_slots: int = 8
+    max_len: int = 512
+    kernels: L.KernelConfig = L.DEFAULT_KERNELS
+    eos_id: int = 1
+    cache: str | None = None          # None -> kernels.cache_layout
+    page_size: int = 16
+    num_pages: int | None = None      # None -> batch_slots * ceil(max_len/page)
+    cache_dtype: object = None        # None -> kv_cache.DEFAULT_CACHE_DTYPE
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.batch_slots <= 0:
+            raise ValueError(f"batch_slots must be > 0, got {self.batch_slots}")
+        if self.max_len <= 0:
+            raise ValueError(f"max_len must be > 0, got {self.max_len}")
+        if self.page_size <= 0:
+            raise ValueError(f"page_size must be > 0, got {self.page_size}")
+        if self.num_pages is not None and self.num_pages <= 0:
+            raise ValueError(
+                f"num_pages must be > 0 (or None for the capacity-equivalent "
+                f"default), got {self.num_pages}")
+        layout = getattr(self.cache, "value", self.cache)
+        if layout is not None and layout not in ("slot", "paged"):
+            raise ValueError(f"unknown cache layout {self.cache!r}")
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """A completed or aborted request, with request-level latency metrics.
+
+    ``output`` holds the generated token ids (stop/eos token included when it
+    caused the stop).  Aborted-while-queued requests have empty ``output``
+    and ``t_first_token == 0.0``.
+    """
+    rid: int
+    prompt_len: int
+    output: list[int]
+    arrival: float
+    t_first_token: float
+    t_done: float
+    finish_reason: FinishReason | None = None
+
+    @property
+    def state(self) -> RequestState:
+        return (RequestState.ABORTED
+                if self.finish_reason is FinishReason.ABORT
+                else RequestState.FINISHED)
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token, from submission (0.0 when no token was ever
+        produced — e.g. aborted while still queued)."""
+        if not self.t_first_token:
+            return 0.0
+        return self.t_first_token - self.arrival
+
+    @property
+    def tpot(self) -> float:
+        """Time per output token over the decode phase (post-first-token)."""
+        n = len(self.output)
+        if n <= 1 or not self.t_first_token:
+            return 0.0
+        return (self.t_done - self.t_first_token) / (n - 1)
+
+    @property
+    def latency(self) -> float:
+        """End-to-end latency, submission to completion."""
+        return self.t_done - self.arrival
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamEvent:
+    """One token of one request, yielded by ``Engine.stream()``.
+
+    ``index`` is the token's position in the request's output.  Terminal
+    events set ``finish_reason`` and carry the full ``RequestOutput``; an
+    abort's terminal event has ``token is None`` (nothing was sampled).
+    """
+    rid: int
+    token: int | None
+    index: int
+    finish_reason: FinishReason | None = None
+    output: RequestOutput | None = None

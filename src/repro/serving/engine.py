@@ -1,7 +1,28 @@
 """Serving engine: continuous batching with jitted prefill and a single fused
-decode+sample step — the vLLM role in the paper's stack (DESIGN.md §2, §10).
+decode+sample step — the vLLM role in the paper's stack (DESIGN.md §2, §10,
+§11).
 
-Two cache layouts, selected by ``Engine(cache=...)`` (default: the
+The public surface is the request lifecycle API (``serving/api.py``):
+
+* ``Engine(model, params, EngineConfig(...))`` — construction is
+  single-sourced through ``EngineConfig``; the old 10-kwarg constructor
+  survives as a deprecated shim (gated by ``tests/test_lint.py``).
+* ``submit()`` validates at admission time (slot/page capacity,
+  ``SamplingParams`` domains) and takes per-request stop criteria
+  (``stop_token_ids``, ``ignore_eos``, ``max_new_tokens``).
+* ``generate(prompts)`` — blocking convenience, returns ``RequestOutput``s
+  with per-request ``ttft``/``tpot``/``finish_reason``.
+* ``stream()`` — an iterator that pumps ``step()`` and yields per-token
+  ``StreamEvent``s across *all* in-flight requests (continuous batching
+  preserved); terminal events carry the ``RequestOutput``.
+* ``abort(rid)`` — cancels a queued or in-flight request, freeing its slot
+  or paged reservation (including prefix-cache refcounts) immediately.
+* Requests move ``QUEUED → PREFILL → RUNNING → FINISHED | ABORTED``
+  (``RequestState``); ``launch/serve.py --serve`` exposes the whole thing as
+  an OpenAI-style ``/v1/completions`` HTTP endpoint with SSE streaming
+  (``serving/http_api.py``).
+
+Two cache layouts, selected by ``EngineConfig.cache`` (default: the
 ``KernelConfig.cache_layout`` enum):
 
 * ``"slot"`` — the model's native contiguous cache, fixed ``max_len`` per
@@ -27,17 +48,19 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
+from typing import Iterator, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import LM
-from repro.models import layers as L
 from repro.serving import kv_cache as KV
+from repro.serving.api import (EngineConfig, FinishReason, RequestOutput,
+                               RequestState, StreamEvent)
 from repro.serving.sampler import SamplingParams, sample, sample_batched
-from repro.serving.scheduler import (Finished, Request, Scheduler,
-                                     bucket_len)
+from repro.serving.scheduler import Active, Request, Scheduler, bucket_len
 
 
 @dataclasses.dataclass
@@ -56,25 +79,52 @@ class EngineStats:
         return self.tokens_generated / self.wall_s if self.wall_s else 0.0
 
 
+_UNSET = object()
+
+
 class Engine:
-    def __init__(self, model: LM, params, *, batch_slots: int = 8,
-                 max_len: int = 512, kernels: L.KernelConfig = L.DEFAULT_KERNELS,
-                 eos_id: int = 1, cache_dtype=None, seed: int = 0,
-                 cache: str | None = None, page_size: int = 16,
-                 num_pages: int | None = None):
+    def __init__(self, model: LM, params,
+                 config: Optional[EngineConfig] = None, *,
+                 batch_slots=_UNSET, max_len=_UNSET, kernels=_UNSET,
+                 eos_id=_UNSET, cache_dtype=_UNSET, seed=_UNSET,
+                 cache=_UNSET, page_size=_UNSET, num_pages=_UNSET):
+        legacy = {k: v for k, v in dict(
+            batch_slots=batch_slots, max_len=max_len, kernels=kernels,
+            eos_id=eos_id, cache_dtype=cache_dtype, seed=seed, cache=cache,
+            page_size=page_size, num_pages=num_pages).items()
+            if v is not _UNSET}
+        if config is not None and legacy:
+            raise TypeError(
+                f"pass either an EngineConfig or legacy kwargs, not both "
+                f"(got config and {sorted(legacy)})")
+        if config is None:
+            # deprecated shim: the pre-EngineConfig kwarg constructor.
+            # tests/test_lint.py gates in-repo (non-test) callers off it.
+            if legacy:
+                warnings.warn(
+                    "Engine(**kwargs) is deprecated; pass "
+                    "Engine(model, params, EngineConfig(...))",
+                    DeprecationWarning, stacklevel=2)
+            config = EngineConfig(**legacy)
+        self.config = config
         self.model = model
         self.params = params
-        self.kernels = kernels
-        self.eos_id = eos_id
+        self.kernels = config.kernels
+        self.eos_id = config.eos_id
         self.sched = Scheduler()
-        self.rng = jax.random.key(seed)
+        self.rng = jax.random.key(config.seed)
         self.stats = EngineStats()
         self._next_rid = 0
-        cache_dtype = cache_dtype if cache_dtype is not None \
+        self._requests: dict[int, Request] = {}
+        self._events: list[StreamEvent] = []
+        cache_dtype = config.cache_dtype if config.cache_dtype is not None \
             else KV.DEFAULT_CACHE_DTYPE
         self.cache_dtype = jnp.dtype(cache_dtype)
+        batch_slots, max_len = config.batch_slots, config.max_len
+        page_size, num_pages = config.page_size, config.num_pages
 
-        layout = cache if cache is not None else kernels.cache_layout
+        layout = config.cache if config.cache is not None \
+            else config.kernels.cache_layout
         self.layout = getattr(layout, "value", layout)
         if self.layout not in ("slot", "paged"):
             raise ValueError(f"unknown cache layout {layout!r}")
@@ -196,7 +246,25 @@ class Engine:
 
     # -------------------------------------------------------------- lifecycle
     def submit(self, tokens: list[int], max_new_tokens: int = 32,
-               sampling: SamplingParams = SamplingParams(greedy=True)) -> int:
+               sampling: SamplingParams = SamplingParams(greedy=True), *,
+               stop_token_ids: Sequence[int] = (),
+               ignore_eos: bool = False) -> int:
+        """Queue one request; returns its rid.
+
+        Validates everything a bad request could break later — prompt+decode
+        capacity on *both* cache layouts and the ``SamplingParams`` domains —
+        so failures surface here with a clear message instead of inside the
+        jitted decode step.  ``stop_token_ids`` stop generation like eos
+        does; ``ignore_eos=True`` disables the eos stop (fixed-length
+        benchmark decoding).
+        """
+        tokens = list(tokens)
+        if not tokens:
+            raise ValueError("empty prompt")
+        if max_new_tokens <= 0:
+            raise ValueError(
+                f"max_new_tokens must be > 0, got {max_new_tokens}")
+        sampling.validate(self.model.cfg.vocab_size)
         if self.layout == "paged":
             need = self.pc.pages_needed(len(tokens) + max_new_tokens)
             if need > min(self.pc.max_pages, self.pc.num_pages):
@@ -205,25 +273,92 @@ class Engine:
                     f"(prompt {len(tokens)} + max_new {max_new_tokens} "
                     f"tokens) but the pool can never provide more than "
                     f"{min(self.pc.max_pages, self.pc.num_pages)}")
+        elif len(tokens) + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request needs {len(tokens) + max_new_tokens} cache "
+                f"positions (prompt {len(tokens)} + max_new "
+                f"{max_new_tokens} tokens) but slot capacity max_len is "
+                f"{self.max_len}")
         rid = self._next_rid
         self._next_rid += 1
-        self.sched.submit(Request(rid=rid, tokens=list(tokens),
-                                  max_new_tokens=max_new_tokens,
-                                  sampling=sampling, arrival=time.time()))
+        req = Request(rid=rid, tokens=tokens,
+                      max_new_tokens=max_new_tokens, sampling=sampling,
+                      arrival=time.time(),
+                      stop_token_ids=tuple(stop_token_ids),
+                      ignore_eos=ignore_eos)
+        self._requests[rid] = req
+        self.sched.submit(req)
         return rid
+
+    def state_of(self, rid: int) -> RequestState:
+        """Current lifecycle state of a submitted request."""
+        return self._requests[rid].state
+
+    def abort(self, rid: int) -> Optional[RequestOutput]:
+        """Cancel a queued or in-flight request.
+
+        Frees its decode slot or paged reservation immediately (page
+        refcounts — including prefix-cache-shared pages — return to their
+        pre-request values; the block-table row and free list are restored).
+        Returns the partial ``RequestOutput`` with
+        ``finish_reason=FinishReason.ABORT``, or None when the rid is
+        unknown or already finished.  A terminal ``StreamEvent`` is emitted
+        so ``stream()`` consumers observe the abort.
+        """
+        req = self.sched.cancel(rid)
+        if req is not None:                    # still queued: nothing held
+            req.state = RequestState.ABORTED
+            out = RequestOutput(
+                rid=rid, prompt_len=len(req.tokens), output=[],
+                arrival=req.arrival, t_first_token=0.0, t_done=time.time(),
+                finish_reason=FinishReason.ABORT)
+            self._events.append(StreamEvent(
+                rid=rid, token=None, index=0,
+                finish_reason=FinishReason.ABORT, output=out))
+            return out
+        hit = self.sched.find_active(rid)
+        if hit is None:
+            return None
+        row, a = hit
+        out = self._finish(row, [], FinishReason.ABORT)
+        self._events.append(StreamEvent(
+            rid=rid, token=None, index=len(out.output),
+            finish_reason=FinishReason.ABORT, output=out))
+        return out
+
+    def _stop_reason(self, a: Active) -> Optional[FinishReason]:
+        """Per-request stop criteria, checked after each generated token."""
+        tok, req = a.output[-1], a.req
+        if tok in req.stop_token_ids:
+            return FinishReason.STOP
+        if not req.ignore_eos and tok == self.eos_id:
+            return FinishReason.STOP
+        if len(a.output) >= req.max_new_tokens:
+            return FinishReason.LENGTH
+        return None
+
+    def _emit_token(self, a: Active, row: int, tok: int,
+                    finished: list[RequestOutput]):
+        """Record one generated token: stop-criteria check, terminal
+        bookkeeping, and the StreamEvent for ``stream()`` consumers."""
+        reason = self._stop_reason(a)
+        out = self._finish(row, finished, reason) if reason else None
+        self._events.append(StreamEvent(
+            rid=a.req.rid, token=tok, index=len(a.output) - 1,
+            finish_reason=reason, output=out))
 
     def _sample_first(self, logits, req: Request) -> int:
         """Sample the first generated token from the prefill logits."""
         self.rng, k = jax.random.split(self.rng)
         return int(sample(logits, k, req.sampling)[0])
 
-    def _admit(self, finished: list[Finished]):
+    def _admit(self, finished: list[RequestOutput]):
         if self.layout == "paged":
             self._admit_paged(finished)
         else:
             self._admit_slot(finished)
 
-    def _admit_slot(self, finished: list[Finished]):
+    def _admit_slot(self, finished: list[RequestOutput]):
         for req in self.sched.admit(self.slots.num_free):
             slot = self.slots.alloc()
             assert slot is not None
@@ -250,8 +385,8 @@ class Engine:
             tok = self._sample_first(logits, req)
             a.t_first_token = time.time()
             a.output.append(tok)
-            if tok == self.eos_id or len(a.output) >= req.max_new_tokens:
-                self._finish(slot, finished)
+            req.state = RequestState.RUNNING
+            self._emit_token(a, slot, tok, finished)
 
     def _reserve_paged(self, req: Request) -> bool:
         """Admission policy for ``Scheduler.admit``: reserve the request's
@@ -267,7 +402,7 @@ class Engine:
         self.pc.register_prefix(req.rid, req.tokens)
         return True
 
-    def _admit_paged(self, finished: list[Finished]):
+    def _admit_paged(self, finished: list[RequestOutput]):
         pc = self.pc
         for req in self.sched.admit(self._reserve_paged):
             row = pc.row_of(req.rid)
@@ -291,23 +426,34 @@ class Engine:
             tok = self._sample_first(logits, req)
             a.t_first_token = time.time()
             a.output.append(tok)
-            if tok == self.eos_id or len(a.output) >= req.max_new_tokens:
-                self._finish(row, finished)
+            req.state = RequestState.RUNNING
+            self._emit_token(a, row, tok, finished)
 
-    def _finish(self, row: int, finished: list[Finished]):
+    def _finish(self, row: int, finished: list[RequestOutput],
+                reason: FinishReason = FinishReason.STOP) -> RequestOutput:
         a = self.sched.retire(row)
         if self.layout == "paged":
             self.pc.free_seq(a.req.rid)
         else:
             self.slots.free(row)
-        finished.append(Finished(
+        a.req.state = (RequestState.ABORTED if reason is FinishReason.ABORT
+                       else RequestState.FINISHED)
+        out = RequestOutput(
             rid=a.req.rid, prompt_len=len(a.req.tokens), output=a.output,
             arrival=a.req.arrival, t_first_token=a.t_first_token,
-            t_done=time.time()))
+            t_done=time.time(), finish_reason=reason)
+        finished.append(out)
+        return out
 
-    def step(self) -> list[Finished]:
+    # a legacy `while True: eng.step()` loop never drains the event buffer;
+    # cap it (drop-oldest) so such callers don't grow memory unboundedly
+    _MAX_PENDING_EVENTS = 65_536
+
+    def step(self) -> list[RequestOutput]:
         """One engine iteration: admissions + one fused decode+sample step."""
-        finished: list[Finished] = []
+        if len(self._events) > self._MAX_PENDING_EVENTS:
+            del self._events[:len(self._events) - self._MAX_PENDING_EVENTS]
+        finished: list[RequestOutput] = []
         self._admit(finished)
         if not self.sched.active:
             return finished
@@ -358,17 +504,81 @@ class Engine:
             a = self.sched.active[s]
             tok = toks[s]
             a.output.append(tok)
-            if tok == self.eos_id or len(a.output) >= a.req.max_new_tokens:
-                self._finish(s, finished)
+            self._emit_token(a, s, tok, finished)
         return finished
 
-    def run(self, *, max_steps: int = 10_000) -> list[Finished]:
+    def drain_events(self) -> list[StreamEvent]:
+        """Take ownership of the pending ``StreamEvent``s (per-token events
+        from ``step()`` and terminal abort events) without stepping."""
+        events, self._events = self._events, []
+        return events
+
+    def step_events(self) -> list[StreamEvent]:
+        """One engine iteration, returning the per-token ``StreamEvent``s it
+        produced (plus any pending abort events) instead of just the
+        finished requests."""
+        self.step()
+        return self.drain_events()
+
+    def run(self, *, max_steps: int = 10_000) -> list[RequestOutput]:
         """Drain the queue; returns finished requests with latency stats."""
         t0 = time.time()
-        out: list[Finished] = []
+        out: list[RequestOutput] = []
         steps = 0
         while not self.sched.idle and steps < max_steps:
             out.extend(self.step())
+            self._events.clear()       # run() consumers read outputs, not events
             steps += 1
         self.stats.wall_s += time.time() - t0
         return out
+
+    def generate(self, prompts, *, max_new_tokens: int = 32,
+                 sampling: SamplingParams = SamplingParams(greedy=True),
+                 stop_token_ids: Sequence[int] = (),
+                 ignore_eos: bool = False,
+                 max_steps: int = 10_000) -> list[RequestOutput]:
+        """Blocking convenience: submit ``prompts`` (one token-id list, or a
+        list of them) and pump ``step()`` until they all finish.  Returns
+        their ``RequestOutput``s in submission order.  ``sampling`` may be a
+        single ``SamplingParams`` or one per prompt."""
+        if prompts and isinstance(prompts[0], int):
+            prompts = [prompts]
+        samplings = (list(sampling) if isinstance(sampling, (list, tuple))
+                     else [sampling] * len(prompts))
+        if len(samplings) != len(prompts):
+            raise ValueError(
+                f"{len(prompts)} prompts but {len(samplings)} SamplingParams")
+        rids = [self.submit(p, max_new_tokens=max_new_tokens, sampling=sp,
+                            stop_token_ids=stop_token_ids,
+                            ignore_eos=ignore_eos)
+                for p, sp in zip(prompts, samplings)]
+        want = set(rids)
+        outs: dict[int, RequestOutput] = {}
+        t0 = time.time()
+        steps = 0
+        while want and not self.sched.idle and steps < max_steps:
+            for out in self.step():
+                if out.rid in want:
+                    outs[out.rid] = out
+                    want.discard(out.rid)
+            self._events.clear()
+            steps += 1
+        self.stats.wall_s += time.time() - t0
+        return [outs[r] for r in rids if r in outs]
+
+    def stream(self, *, max_steps: int = 10_000) -> Iterator[StreamEvent]:
+        """Pump ``step()`` until the engine is idle, yielding one
+        ``StreamEvent`` per generated token across all in-flight requests —
+        continuous batching preserved (new submissions made while iterating
+        are admitted and interleaved).  Terminal events carry the request's
+        ``RequestOutput``; aborts surface as terminal events too."""
+        t0 = time.time()
+        steps = 0
+        try:
+            while not self.sched.idle and steps < max_steps:
+                yield from self.step_events()
+                steps += 1
+            # e.g. an abort() that idled the engine mid-iteration
+            yield from self.drain_events()
+        finally:
+            self.stats.wall_s += time.time() - t0

@@ -1,0 +1,310 @@
+"""Stdlib-only OpenAI-style HTTP front-end over ``Engine.stream()``.
+
+``POST /v1/completions`` with an OpenAI-ish JSON body serves completions
+from the continuous-batching engine; ``"stream": true`` switches to SSE
+(``data: {chunk}\\n\\n`` per token, terminated by ``data: [DONE]``).  The
+repo has no tokenizer, so ``"prompt"`` must be a list of token ids and
+``choices[].text`` carries the space-joined ids alongside
+``choices[].token_ids``.
+
+Threading model: HTTP handlers run on ``ThreadingHTTPServer`` threads, but
+the ``Engine`` is single-threaded — one ``EngineWorker`` thread owns it and
+pumps ``step_events()``.  Handlers talk to the worker through queues only:
+submissions (and aborts, on client disconnect) go through ``worker.inbox``;
+each request's ``StreamEvent``s come back on a per-request queue.  Requests
+submitted while others are decoding join the running batch — continuous
+batching straight through HTTP.
+
+    eng = Engine(model, params, EngineConfig(...))
+    server = make_server(eng, port=8000, model_name=cfg.name)
+    server.serve_forever()          # or launch/serve.py --serve
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import queue
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from repro.serving.sampler import SamplingParams
+
+# how long a handler waits for the next token before giving up on the worker
+EVENT_TIMEOUT_S = 300.0
+
+
+@dataclasses.dataclass
+class _Submission:
+    """One HTTP request's hand-off to the engine worker."""
+    tokens: list[int]
+    max_new_tokens: int
+    sampling: SamplingParams
+    stop_token_ids: tuple[int, ...]
+    ignore_eos: bool
+    # per-request StreamEvent fan-out queue, and the rid/Exception handshake
+    events: queue.Queue = dataclasses.field(default_factory=queue.Queue)
+    reply: queue.Queue = dataclasses.field(default_factory=queue.Queue)
+
+
+class EngineWorker(threading.Thread):
+    """The single thread that owns the engine.
+
+    Drains control ops (submit/abort) from ``inbox``, pumps
+    ``Engine.step_events()`` while requests are in flight, and fans each
+    event out to its request's subscriber queue.  Idle polling is a short
+    blocking ``inbox.get`` — no busy loop.
+    """
+
+    def __init__(self, engine, idle_poll_s: float = 0.02):
+        super().__init__(daemon=True, name="engine-worker")
+        self.eng = engine
+        self.idle_poll_s = idle_poll_s
+        self.inbox: "queue.Queue[tuple[str, object]]" = queue.Queue()
+        self._halt = threading.Event()
+        self._subs: dict[int, queue.Queue] = {}
+
+    # ---------------------------------------------- handler-thread interface
+    def submit(self, sub: _Submission) -> int:
+        """Hand a submission to the engine thread; returns its rid or raises
+        the engine's validation error."""
+        self.inbox.put(("submit", sub))
+        res = sub.reply.get(timeout=EVENT_TIMEOUT_S)
+        if isinstance(res, Exception):
+            raise res
+        return res
+
+    def abort(self, rid: int):
+        self.inbox.put(("abort", rid))
+
+    def shutdown(self, timeout: float = 5.0):
+        self._halt.set()
+        self.join(timeout=timeout)
+
+    # ------------------------------------------------------- engine thread
+    def _handle(self, op: str, payload):
+        if op == "submit":
+            sub = payload
+            try:
+                rid = self.eng.submit(
+                    sub.tokens, max_new_tokens=sub.max_new_tokens,
+                    sampling=sub.sampling,
+                    stop_token_ids=sub.stop_token_ids,
+                    ignore_eos=sub.ignore_eos)
+            except Exception as e:          # validation error -> HTTP 400
+                sub.reply.put(e)
+                return
+            self._subs[rid] = sub.events
+            sub.reply.put(rid)
+        elif op == "abort":
+            self.eng.abort(payload)          # terminal event reaches the
+            # subscriber via the engine's event list on the next drain; a
+            # disconnected client's queue simply goes unread after that
+        else:                                # pragma: no cover
+            raise AssertionError(f"unknown op {op!r}")
+
+    def _fan_out(self, events):
+        for ev in events:
+            q = self._subs.get(ev.rid)
+            if q is not None:
+                q.put(ev)
+                if ev.finish_reason is not None:
+                    self._subs.pop(ev.rid, None)
+
+    def run(self):
+        while not self._halt.is_set():
+            while True:                      # drain all pending control ops
+                try:
+                    op, payload = self.inbox.get_nowait()
+                except queue.Empty:
+                    break
+                self._handle(op, payload)
+            if self.eng.sched.idle:
+                # an abort that idled the engine leaves its terminal event
+                # pending — deliver it (and release the _subs entry) now
+                self._fan_out(self.eng.drain_events())
+                try:
+                    op, payload = self.inbox.get(timeout=self.idle_poll_s)
+                except queue.Empty:
+                    continue
+                self._handle(op, payload)
+                continue
+            self._fan_out(self.eng.step_events())
+
+
+# --------------------------------------------------------------- HTTP layer
+def _parse_completion_body(body: dict) -> _Submission:
+    prompt = body.get("prompt")
+    if (not isinstance(prompt, list) or not prompt
+            or not all(isinstance(t, int) for t in prompt)):
+        raise ValueError(
+            "'prompt' must be a non-empty list of token ids (this server "
+            "has no tokenizer)")
+    temperature = float(body.get("temperature", 1.0))
+    stop = body.get("stop", [])
+    if isinstance(stop, int):
+        stop = [stop]
+    if not isinstance(stop, list) or not all(isinstance(t, int) for t in stop):
+        raise ValueError("'stop' must be a token id or list of token ids")
+    return _Submission(
+        tokens=list(prompt),
+        max_new_tokens=int(body.get("max_tokens", 16)),
+        sampling=SamplingParams(
+            temperature=temperature,
+            top_k=int(body.get("top_k", 0)),
+            top_p=float(body.get("top_p", 1.0)),
+            greedy=temperature == 0.0),
+        stop_token_ids=tuple(stop),
+        ignore_eos=bool(body.get("ignore_eos", False)))
+
+
+def _choice(ev_or_tokens, finish_reason=None) -> dict:
+    toks = (ev_or_tokens if isinstance(ev_or_tokens, list)
+            else [ev_or_tokens])
+    return {"index": 0,
+            "token_ids": toks,
+            "text": " ".join(map(str, toks)),
+            "finish_reason": (finish_reason.value
+                              if finish_reason is not None else None)}
+
+
+class CompletionsHandler(BaseHTTPRequestHandler):
+    """``/v1/completions`` (+ ``/v1/models``, ``/healthz``)."""
+    protocol_version = "HTTP/1.1"
+
+    def log_message(self, *args):            # keep benchmark/test output clean
+        pass
+
+    @property
+    def worker(self) -> EngineWorker:
+        return self.server.worker
+
+    def _json(self, code: int, payload: dict):
+        data = json.dumps(payload).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
+
+    def do_GET(self):
+        if self.path == "/healthz":
+            self._json(200, {"status": "ok"})
+        elif self.path == "/v1/models":
+            self._json(200, {"object": "list", "data": [
+                {"id": self.server.model_name, "object": "model"}]})
+        else:
+            self._json(404, {"error": {"message": f"no route {self.path}"}})
+
+    def do_POST(self):
+        if self.path != "/v1/completions":
+            self._json(404, {"error": {"message": f"no route {self.path}"}})
+            return
+        try:
+            n = int(self.headers.get("Content-Length", 0))
+            body = json.loads(self.rfile.read(n) or b"{}")
+            sub = _parse_completion_body(body)
+        except (ValueError, json.JSONDecodeError) as e:
+            self._json(400, {"error": {"message": str(e),
+                                       "type": "invalid_request_error"}})
+            return
+        try:
+            rid = self.worker.submit(sub)
+        except (ValueError, queue.Empty) as e:
+            self._json(400, {"error": {"message": str(e),
+                                       "type": "invalid_request_error"}})
+            return
+        if body.get("stream", False):
+            self._stream_response(rid, sub)
+        else:
+            self._blocking_response(rid, sub)
+
+    # ------------------------------------------------------------ responses
+    def _envelope(self, rid: int) -> dict:
+        return {"id": f"cmpl-{rid}", "object": "text_completion",
+                "created": int(time.time()), "model": self.server.model_name}
+
+    def _blocking_response(self, rid: int, sub: _Submission):
+        toks: list[int] = []
+        out = None
+        while True:
+            try:
+                ev = sub.events.get(timeout=EVENT_TIMEOUT_S)
+            except queue.Empty:
+                # engine stalled: cancel the request so its reservation
+                # frees, and tell the client instead of dropping the socket
+                self.worker.abort(rid)
+                self._json(504, {"error": {
+                    "message": f"no token within {EVENT_TIMEOUT_S:.0f}s",
+                    "type": "timeout_error"}})
+                return
+            if ev.token is not None:
+                toks.append(ev.token)
+            if ev.finish_reason is not None:
+                out = ev.output
+                break
+        resp = self._envelope(rid)
+        resp["choices"] = [_choice(toks, out.finish_reason)]
+        resp["usage"] = {
+            "prompt_tokens": out.prompt_len, "completion_tokens": len(toks),
+            "total_tokens": out.prompt_len + len(toks)}
+        resp["metrics"] = {"ttft_s": out.ttft, "tpot_s": out.tpot,
+                           "latency_s": out.latency}
+        self._json(200, resp)
+
+    def _stream_response(self, rid: int, sub: _Submission):
+        self.send_response(200)
+        self.send_header("Content-Type", "text/event-stream")
+        self.send_header("Cache-Control", "no-cache")
+        self.send_header("Connection", "close")
+        self.end_headers()
+        try:
+            while True:
+                ev = sub.events.get(timeout=EVENT_TIMEOUT_S)
+                chunk = self._envelope(rid)
+                chunk["choices"] = [_choice(
+                    [ev.token] if ev.token is not None else [],
+                    ev.finish_reason)]
+                self.wfile.write(b"data: " + json.dumps(chunk).encode()
+                                 + b"\n\n")
+                self.wfile.flush()
+                if ev.finish_reason is not None:
+                    break
+            self.wfile.write(b"data: [DONE]\n\n")
+            self.wfile.flush()
+        except (BrokenPipeError, ConnectionResetError):
+            # client went away mid-stream: cancel the request so its slot /
+            # paged reservation (and prefix refcounts) free immediately
+            self.worker.abort(rid)
+        except queue.Empty:
+            self.worker.abort(rid)
+
+
+class CompletionsServer(ThreadingHTTPServer):
+    daemon_threads = True
+    allow_reuse_address = True
+
+    def __init__(self, addr, handler, *, worker: EngineWorker,
+                 model_name: str):
+        super().__init__(addr, handler)
+        self.worker = worker
+        self.model_name = model_name
+
+    def shutdown(self):
+        super().shutdown()
+        self.worker.shutdown()
+
+    @property
+    def port(self) -> int:
+        return self.server_address[1]
+
+
+def make_server(engine, host: str = "127.0.0.1", port: int = 0,
+                model_name: str = "repro") -> CompletionsServer:
+    """Start the engine worker and bind the HTTP server (``port=0`` picks an
+    ephemeral port — read it back from ``server.port``).  The caller runs
+    ``server.serve_forever()``; ``server.shutdown()`` stops both."""
+    worker = EngineWorker(engine)
+    worker.start()
+    return CompletionsServer((host, port), CompletionsHandler,
+                             worker=worker, model_name=model_name)

@@ -14,6 +14,24 @@ class SamplingParams:
     top_p: float = 1.0          # 1.0 = off
     greedy: bool = False
 
+    def validate(self, vocab_size: int | None = None):
+        """Reject out-of-domain parameters at submit time with a clear
+        message, instead of letting them fail (or silently misbehave) inside
+        the jitted batched sampler.  Comparisons are written so NaN fails."""
+        if not self.temperature >= 0.0:
+            raise ValueError(
+                f"temperature must be >= 0 (0 means greedy), got "
+                f"{self.temperature}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(
+                f"top_p must be in (0, 1] (1.0 disables), got {self.top_p}")
+        if not self.top_k >= 0:
+            raise ValueError(
+                f"top_k must be >= 0 (0 disables), got {self.top_k}")
+        if vocab_size is not None and self.top_k >= vocab_size:
+            raise ValueError(
+                f"top_k must be < vocab size {vocab_size}, got {self.top_k}")
+
 
 def sample(logits: jnp.ndarray, rng, params: SamplingParams) -> jnp.ndarray:
     """logits: (B, V) -> token ids (B,)."""

@@ -1,12 +1,17 @@
 """Continuous-batching scheduler: FCFS admission into decode slots, bucketed
-prefill lengths (bounded jit recompiles), per-request latency accounting."""
+prefill lengths (bounded jit recompiles), per-request lifecycle tracking."""
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Union
+from typing import Callable, Optional, Union
 
+from repro.serving.api import RequestOutput, RequestState
 from repro.serving.sampler import SamplingParams
+
+# Backwards-compatible alias: the engine used to return ``Finished`` records;
+# the redesigned API calls the same record ``RequestOutput`` (serving/api.py).
+Finished = RequestOutput
 
 
 @dataclasses.dataclass
@@ -16,24 +21,11 @@ class Request:
     max_new_tokens: int = 32
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     arrival: float = 0.0
-
-
-@dataclasses.dataclass
-class Finished:
-    rid: int
-    prompt_len: int
-    output: list[int]
-    arrival: float
-    t_first_token: float
-    t_done: float
-
-    @property
-    def ttft(self) -> float:
-        return self.t_first_token - self.arrival
-
-    @property
-    def latency(self) -> float:
-        return self.t_done - self.arrival
+    # per-request stop criteria (ISSUE 3): extra stop token ids beyond eos,
+    # and an eos opt-out for benchmark-style fixed-length generation
+    stop_token_ids: tuple[int, ...] = ()
+    ignore_eos: bool = False
+    state: RequestState = RequestState.QUEUED
 
 
 @dataclasses.dataclass
@@ -62,6 +54,7 @@ class Scheduler:
         self.active: dict[int, Active] = {}
 
     def submit(self, req: Request):
+        req.state = RequestState.QUEUED
         self.waiting.append(req)
 
     def admit(self, budget: Union[int, Callable[[Request], bool]]
@@ -83,6 +76,8 @@ class Scheduler:
             while self.waiting and budget > 0:
                 out.append(self.waiting.popleft())
                 budget -= 1
+        for req in out:
+            req.state = RequestState.PREFILL
         return out
 
     def activate(self, req: Request, slot: int) -> Active:
@@ -92,6 +87,21 @@ class Scheduler:
 
     def retire(self, slot: int) -> Active:
         return self.active.pop(slot)
+
+    def cancel(self, rid: int) -> Optional[Request]:
+        """Remove a still-queued request (abort-before-admission)."""
+        for i, req in enumerate(self.waiting):
+            if req.rid == rid:
+                del self.waiting[i]
+                return req
+        return None
+
+    def find_active(self, rid: int) -> Optional[tuple[int, Active]]:
+        """(row, Active) for an in-flight request, or None."""
+        for row, a in self.active.items():
+            if a.req.rid == rid:
+                return row, a
+        return None
 
     @property
     def idle(self) -> bool:

@@ -1,10 +1,14 @@
-"""Dead-import lint gate (ISSUE 2 satellite).
+"""Lint gates.
 
-Runs ``pyflakes`` over ``src/`` when it is installed (``pip install -r
-requirements-dev.txt``).  Otherwise falls back to a minimal AST-based
-unused-import check (imports bound at module level that are never referenced
-as a load anywhere in the module) so the gate still bites in dependency-free
-environments.  Lines carrying ``# noqa`` are exempt in both modes.
+* Dead imports (ISSUE 2 satellite): ``pyflakes`` over ``src/`` when
+  installed (``pip install -r requirements-dev.txt``), else a minimal
+  AST-based unused-import check (imports bound at module level that are
+  never referenced as a load anywhere in the module) so the gate still
+  bites in dependency-free environments.  ``# noqa`` lines are exempt.
+* Deprecated Engine kwargs (ISSUE 3 satellite): in-repo code under
+  ``src/``, ``examples/`` and ``benchmarks/`` must construct the engine via
+  ``Engine(model, params, EngineConfig(...))`` — the legacy 10-kwarg shim
+  exists only for out-of-repo callers (and the tests that cover it).
 """
 from __future__ import annotations
 
@@ -13,8 +17,8 @@ import os
 import subprocess
 import sys
 
-SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                   "src")
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(_ROOT, "src")
 
 
 def _have_pyflakes() -> bool:
@@ -65,6 +69,46 @@ def _unused_imports(path: str) -> list[str]:
             for name, line in sorted(imported.items(), key=lambda kv: kv[1])
             if name not in used and name not in exported
             and line not in noqa_lines]
+
+
+# Engine.__init__'s legacy kwarg names — the deprecated shim.  New in-repo
+# code passes these through EngineConfig instead.
+DEPRECATED_ENGINE_KWARGS = frozenset({
+    "batch_slots", "max_len", "kernels", "eos_id", "cache_dtype", "seed",
+    "cache", "page_size", "num_pages"})
+
+
+def _legacy_engine_calls(path: str) -> list[str]:
+    with open(path) as f:
+        tree = ast.parse(f.read(), filename=path)
+    hits = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        name = fn.id if isinstance(fn, ast.Name) else (
+            fn.attr if isinstance(fn, ast.Attribute) else None)
+        if name != "Engine":
+            continue
+        legacy = sorted({kw.arg for kw in node.keywords}
+                        & DEPRECATED_ENGINE_KWARGS)
+        if legacy:
+            hits.append(f"{path}:{node.lineno}: Engine(...{legacy}...) uses "
+                        f"the deprecated kwarg shim; pass EngineConfig")
+    return hits
+
+
+def test_no_in_repo_legacy_engine_kwargs():
+    """src/, examples/ and benchmarks/ must use EngineConfig; the deprecated
+    Engine(**old_kwargs) shim is for out-of-repo callers (its behaviour is
+    covered by tests, which are exempt here)."""
+    problems: list[str] = []
+    for top in ("src", "examples", "benchmarks"):
+        for dirpath, _dirs, files in os.walk(os.path.join(_ROOT, top)):
+            for fn in files:
+                if fn.endswith(".py"):
+                    problems += _legacy_engine_calls(os.path.join(dirpath, fn))
+    assert not problems, "\n".join(problems)
 
 
 def test_src_has_no_dead_imports():

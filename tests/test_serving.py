@@ -74,7 +74,7 @@ def test_eos_stops_generation(small_lm):
     eng0 = Engine(model, params, batch_slots=1, max_len=32, eos_id=-1)
     eng0.submit([5, 6, 7], max_new_tokens=2)
     first = eng0.run()[0].output[0]
-    eng = Engine(model, params, batch_slots=1, max_len=32, eos_id=first)
+    eng = Engine(model, params, batch_slots=1, max_len=64, eos_id=first)
     eng.submit([5, 6, 7], max_new_tokens=50)
     done = eng.run()
     assert len(done[0].output) == 1   # stopped right at eos

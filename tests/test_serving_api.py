@@ -1,0 +1,337 @@
+"""Request-lifecycle API tests (ISSUE 3): EngineConfig construction + the
+deprecated-kwarg shim, stream-vs-run token parity on both cache layouts,
+abort resource release (slots, paged free list / refcounts / prefix cache),
+per-request stop criteria + finish_reason, submit-time validation, and an
+HTTP round-trip against the /v1/completions front-end."""
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import build_model
+from repro.serving.api import (EngineConfig, FinishReason, RequestState,
+                               StreamEvent)
+from repro.serving.engine import Engine
+from repro.serving.sampler import SamplingParams
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = smoke_config("qwen3_4b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(2, cfg.vocab_size, size=n).tolist() for n in sizes]
+
+
+# ------------------------------------------------------------- EngineConfig
+def test_engine_config_construction_and_shim(small_lm):
+    cfg, model, params = small_lm
+    econf = EngineConfig(batch_slots=2, max_len=32, eos_id=-1)
+    eng = Engine(model, params, econf)
+    assert eng.config is econf and eng.max_len == 32
+
+    # the deprecated kwarg shim still works, and warns
+    with pytest.warns(DeprecationWarning):
+        eng2 = Engine(model, params, batch_slots=2, max_len=32, eos_id=-1)
+    assert eng2.config == econf
+
+    # but mixing both spellings is an error
+    with pytest.raises(TypeError, match="not both"):
+        Engine(model, params, econf, batch_slots=2)
+
+
+def test_engine_config_validates():
+    with pytest.raises(ValueError, match="batch_slots"):
+        EngineConfig(batch_slots=0)
+    with pytest.raises(ValueError, match="max_len"):
+        EngineConfig(max_len=-1)
+    with pytest.raises(ValueError, match="num_pages"):
+        EngineConfig(cache="paged", num_pages=0)
+    with pytest.raises(ValueError, match="cache layout"):
+        EngineConfig(cache="ring")
+
+
+# ------------------------------------------------------- stream/run parity
+@pytest.mark.parametrize("layout", ["slot", "paged"])
+def test_stream_matches_run_token_parity(small_lm, layout):
+    """Greedy stream() output is token-identical to run() on both layouts,
+    and per-token StreamEvents carry correct indices/terminal outputs."""
+    cfg, model, params = small_lm
+    econf = EngineConfig(batch_slots=3, max_len=64, eos_id=-1,
+                         cache=layout, page_size=4)
+    prompts = _prompts(cfg, (7, 13, 3, 9), seed=1)
+
+    eng_run = Engine(model, params, econf)
+    for p in prompts:
+        eng_run.submit(p, max_new_tokens=5)
+    ref = {f.rid: f.output for f in eng_run.run()}
+
+    eng_str = Engine(model, params, econf)
+    rids = [eng_str.submit(p, max_new_tokens=5) for p in prompts]
+    got = {r: [] for r in rids}
+    terminal = {}
+    for ev in eng_str.stream():
+        assert isinstance(ev, StreamEvent)
+        assert ev.index == len(got[ev.rid])
+        got[ev.rid].append(ev.token)
+        if ev.finish_reason is not None:
+            terminal[ev.rid] = ev
+    assert got == ref
+    for rid, ev in terminal.items():
+        assert ev.output.output == ref[rid]
+        assert ev.finish_reason == FinishReason.LENGTH
+        assert eng_str.state_of(rid) == RequestState.FINISHED
+
+
+def test_generate_blocking_convenience(small_lm):
+    cfg, model, params = small_lm
+    eng = Engine(model, params, EngineConfig(batch_slots=2, max_len=64,
+                                             eos_id=-1))
+    prompts = _prompts(cfg, (5, 9, 3), seed=2)
+    outs = eng.generate(prompts, max_new_tokens=4)
+    assert [o.rid for o in outs] == sorted(o.rid for o in outs)  # order kept
+    for o, p in zip(outs, prompts):
+        assert o.prompt_len == len(p)
+        assert len(o.output) == 4
+        assert o.finish_reason == FinishReason.LENGTH
+        assert o.latency >= o.ttft > 0.0
+        assert o.tpot > 0.0
+
+
+# ------------------------------------------------------------------ abort
+def test_abort_queued_request(small_lm):
+    cfg, model, params = small_lm
+    eng = Engine(model, params, EngineConfig(batch_slots=1, max_len=32,
+                                             eos_id=-1))
+    p1, p2 = _prompts(cfg, (5, 5), seed=3)
+    r1 = eng.submit(p1, max_new_tokens=3)
+    r2 = eng.submit(p2, max_new_tokens=3)
+    assert eng.state_of(r2) == RequestState.QUEUED
+    out = eng.abort(r2)
+    assert out.finish_reason == FinishReason.ABORT and out.output == []
+    assert eng.state_of(r2) == RequestState.ABORTED
+    assert out.ttft == 0.0 and out.tpot == 0.0    # no-first-token sentinel
+    done = eng.run()
+    assert [f.rid for f in done] == [r1]
+    assert eng.abort(r1) is None            # already finished -> no-op
+
+
+def test_abort_mid_decode_frees_slot(small_lm):
+    cfg, model, params = small_lm
+    eng = Engine(model, params, EngineConfig(batch_slots=2, max_len=64,
+                                             eos_id=-1))
+    p1, p2 = _prompts(cfg, (6, 8), seed=4)
+    r1 = eng.submit(p1, max_new_tokens=20)
+    eng.submit(p2, max_new_tokens=6)
+    eng.step(); eng.step()
+    out = eng.abort(r1)
+    assert out.finish_reason == FinishReason.ABORT
+    assert 0 < len(out.output) < 20         # partial output preserved
+    done = eng.run()
+    assert [f.rid for f in done] != [r1]
+    assert eng.slots.num_free == 2          # aborted slot released
+    assert eng.sched.idle
+
+
+def test_abort_mid_decode_restores_paged_baseline(small_lm):
+    """Aborting mid-flight returns the paged free list, refcounts and
+    block-table rows to their pre-request values — including pages shared
+    through the prefix cache."""
+    cfg, model, params = small_lm
+    eng = Engine(model, params, EngineConfig(batch_slots=3, max_len=64,
+                                             eos_id=-1, cache="paged",
+                                             page_size=4))
+    rng = np.random.default_rng(5)
+    base = rng.integers(2, cfg.vocab_size, size=8).tolist()   # 2 full pages
+    p1 = base + rng.integers(2, cfg.vocab_size, size=5).tolist()
+    p2 = base + rng.integers(2, cfg.vocab_size, size=3).tolist()
+
+    free0 = sorted(eng.pc.free_list)
+    rc0 = eng.pc.refcount.copy()
+    r1 = eng.submit(p1, max_new_tokens=16)
+    r2 = eng.submit(p2, max_new_tokens=16)
+    eng.step(); eng.step()                  # both admitted (prefix shared)
+    assert eng.stats.prefix_hit_pages > 0
+    out = eng.abort(r1)                     # donor of the shared prefix
+    assert out.finish_reason == FinishReason.ABORT
+    done = eng.run()                        # drain the survivor
+    assert [f.rid for f in done] == [r2]
+    assert sorted(eng.pc.free_list) == free0
+    np.testing.assert_array_equal(eng.pc.refcount, rc0)
+    assert eng.pc.utilization == 0.0
+    assert not eng.pc.rows and not eng.pc.tables
+
+
+def test_abort_surfaces_in_stream(small_lm):
+    cfg, model, params = small_lm
+    eng = Engine(model, params, EngineConfig(batch_slots=2, max_len=64,
+                                             eos_id=-1))
+    (p1,) = _prompts(cfg, (5,), seed=6)
+    r1 = eng.submit(p1, max_new_tokens=30)
+    events = []
+    for ev in eng.stream():
+        events.append(ev)
+        if len(events) == 2:
+            eng.abort(r1)
+    terminal = events[-1]
+    assert terminal.rid == r1 and terminal.token is None
+    assert terminal.finish_reason == FinishReason.ABORT
+    assert len(terminal.output.output) >= 2
+
+
+# ------------------------------------------------------------ stop criteria
+@pytest.mark.parametrize("layout", ["slot", "paged"])
+def test_stop_token_truncation_and_finish_reason(small_lm, layout):
+    cfg, model, params = small_lm
+    econf = EngineConfig(batch_slots=1, max_len=64, eos_id=-1,
+                         cache=layout, page_size=4)
+    (p,) = _prompts(cfg, (5,), seed=7)
+    full = Engine(model, params, econf).generate(
+        [p], max_new_tokens=6)[0].output
+    assert len(full) == 6
+
+    # stop on the 3rd greedy token: output truncates right after it
+    out = Engine(model, params, econf).generate(
+        [p], max_new_tokens=6, stop_token_ids=(full[2],))[0]
+    assert out.output == full[:3]
+    assert out.finish_reason == FinishReason.STOP
+
+
+def test_eos_vs_ignore_eos_finish_reason(small_lm):
+    cfg, model, params = small_lm
+    (p,) = _prompts(cfg, (5,), seed=8)
+    probe = EngineConfig(batch_slots=1, max_len=64, eos_id=-1)
+    full = Engine(model, params, probe).generate(
+        [p], max_new_tokens=6)[0].output
+
+    econf = EngineConfig(batch_slots=1, max_len=64, eos_id=full[1])
+    out = Engine(model, params, econf).generate([p], max_new_tokens=6)[0]
+    assert out.output == full[:2]
+    assert out.finish_reason == FinishReason.STOP
+
+    out2 = Engine(model, params, econf).generate(
+        [p], max_new_tokens=6, ignore_eos=True)[0]
+    assert out2.output == full
+    assert out2.finish_reason == FinishReason.LENGTH
+
+
+# -------------------------------------------------------------- validation
+def test_submit_rejects_over_capacity_both_layouts(small_lm):
+    cfg, model, params = small_lm
+    eng = Engine(model, params, EngineConfig(batch_slots=1, max_len=32,
+                                             eos_id=-1))
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(list(range(2, 30)), max_new_tokens=8)
+    engp = Engine(model, params, EngineConfig(batch_slots=1, max_len=32,
+                                              eos_id=-1, cache="paged",
+                                              page_size=4))
+    with pytest.raises(ValueError, match="pages"):
+        engp.submit(list(range(2, 30)), max_new_tokens=8)
+
+
+def test_submit_validates_sampling_params(small_lm):
+    cfg, model, params = small_lm
+    eng = Engine(model, params, EngineConfig(batch_slots=1, max_len=32,
+                                             eos_id=-1))
+    ok = [5, 6, 7]
+    with pytest.raises(ValueError, match="temperature"):
+        eng.submit(ok, sampling=SamplingParams(temperature=-0.5))
+    with pytest.raises(ValueError, match="top_p"):
+        eng.submit(ok, sampling=SamplingParams(top_p=0.0))
+    with pytest.raises(ValueError, match="top_p"):
+        eng.submit(ok, sampling=SamplingParams(top_p=1.5))
+    with pytest.raises(ValueError, match="top_k"):
+        eng.submit(ok, sampling=SamplingParams(top_k=-1))
+    with pytest.raises(ValueError, match="vocab"):
+        eng.submit(ok, sampling=SamplingParams(top_k=cfg.vocab_size))
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit([])
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(ok, max_new_tokens=0)
+    assert not eng._requests                 # nothing was queued
+
+
+# ------------------------------------------------------------- HTTP server
+@pytest.fixture()
+def http_server(small_lm):
+    from repro.serving.http_api import make_server
+    cfg, model, params = small_lm
+    eng = Engine(model, params, EngineConfig(batch_slots=2, max_len=64,
+                                             eos_id=-1))
+    server = make_server(eng, port=0, model_name=cfg.name)
+    threading.Thread(target=server.serve_forever, daemon=True).start()
+    yield cfg, server
+    server.shutdown()
+
+
+def _post(port, body, timeout=120):
+    req = urllib.request.Request(
+        f"http://127.0.0.1:{port}/v1/completions",
+        data=json.dumps(body).encode(),
+        headers={"Content-Type": "application/json"})
+    return urllib.request.urlopen(req, timeout=timeout)
+
+
+def test_http_completions_roundtrip(small_lm, http_server):
+    """Blocking and SSE-streamed completions over real HTTP agree token-for-
+    token, carry OpenAI-style fields, and bad requests get a 400."""
+    cfg, server = http_server
+    port = server.port
+    prompt = _prompts(cfg, (6,), seed=9)[0]
+
+    resp = json.load(_post(port, {"prompt": prompt, "max_tokens": 4,
+                                  "temperature": 0}))
+    assert resp["object"] == "text_completion"
+    choice = resp["choices"][0]
+    assert len(choice["token_ids"]) == 4
+    assert choice["finish_reason"] == "length"
+    assert resp["usage"] == {"prompt_tokens": 6, "completion_tokens": 4,
+                             "total_tokens": 10}
+    assert resp["metrics"]["ttft_s"] > 0.0
+
+    # SSE stream: one data: chunk per token, then [DONE]
+    streamed, done = [], False
+    with _post(port, {"prompt": prompt, "max_tokens": 4, "temperature": 0,
+                      "stream": True}) as r:
+        assert r.headers["Content-Type"].startswith("text/event-stream")
+        for line in r:
+            line = line.decode().strip()
+            if not line.startswith("data: "):
+                continue
+            if line[6:] == "[DONE]":
+                done = True
+                break
+            streamed += json.loads(line[6:])["choices"][0]["token_ids"]
+    assert done
+    assert streamed == choice["token_ids"]   # greedy parity with blocking
+
+    with pytest.raises(urllib.error.HTTPError) as e:
+        _post(port, {"prompt": "not token ids"})
+    assert e.value.code == 400
+
+    models = json.load(urllib.request.urlopen(
+        f"http://127.0.0.1:{port}/v1/models", timeout=30))
+    assert models["data"][0]["id"] == cfg.name
+
+
+def test_http_stop_tokens(small_lm, http_server):
+    cfg, server = http_server
+    port = server.port
+    prompt = _prompts(cfg, (6,), seed=10)[0]
+    full = json.load(_post(port, {"prompt": prompt, "max_tokens": 5,
+                                  "temperature": 0}))["choices"][0]
+    stop_tok = full["token_ids"][1]
+    resp = json.load(_post(port, {"prompt": prompt, "max_tokens": 5,
+                                  "temperature": 0, "stop": stop_tok}))
+    assert resp["choices"][0]["token_ids"] == full["token_ids"][:2]
+    assert resp["choices"][0]["finish_reason"] == "stop"
