@@ -1,12 +1,15 @@
-"""Request-level serving benchmark (ISSUE 3): ttft / tpot / throughput
-percentiles for the slot vs paged cache layouts, measured through the
-streaming request-lifecycle API (``Engine.generate`` over a ShareGPT-like
-synthetic workload — the same statistics the paper's vLLM runs sample).
+"""Request-level serving benchmark (ISSUE 3 + ISSUE 4): ttft / tpot /
+throughput percentiles for the slot vs paged cache layouts, measured through
+the streaming request-lifecycle API (``Engine.generate`` over a
+ShareGPT-like synthetic workload — the same statistics the paper's vLLM runs
+sample), plus the KV-quant capacity experiment: paged bf16 vs int8 KV under
+the *same page-pool byte budget*, recording the cache footprint, quant mode
+and the peak in-flight batch each mode sustains.
 
 Interpret-mode wall-clock on CPU: the numbers validate the serving harness
-and track the *relative* slot-vs-paged trajectory across PRs, not TPU
-performance.  Emits CSV lines through benchmarks/run.py and writes the
-structured record to BENCH_serving.json at the repo root.
+and track the *relative* slot-vs-paged / bf16-vs-int8 trajectory across PRs,
+not TPU performance.  Emits CSV lines through benchmarks/run.py and writes
+the structured record to BENCH_serving.json at the repo root.
 """
 from __future__ import annotations
 
@@ -24,11 +27,20 @@ from repro.core.quantize_model import quantize_params
 from repro.data.pipeline import sharegpt_stream
 from repro.models import build_model
 from repro.models import layers as L
+from repro.perf import memory_model as MM
 from repro.serving.api import EngineConfig
 from repro.serving.engine import Engine
+from repro.serving.kv_quant import KVQuantConfig, page_bytes
 
 N_REQUESTS = 8
 MAX_NEW = 6
+# capacity experiment: fixed-length prompts so every request needs the same
+# page count, and a budget of 4 bf16 pages — int8 (payload/2 + scales) buys
+# ~7 pages from the identical byte budget
+CAP_PROMPT_LEN = 28
+CAP_MAX_NEW = 4
+CAP_PAGE_SIZE = 16
+CAP_BUDGET_PAGES_BF16 = 4
 JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                          os.pardir, "BENCH_serving.json")
 
@@ -38,6 +50,33 @@ def _pct(xs, unit=1.0) -> dict:
         return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
     return {p: float(np.percentile(xs, q)) * unit
             for p, q in (("p50", 50), ("p95", 95), ("p99", 99))}
+
+
+def _run_engine(model, params, conf, prompts, max_new):
+    eng = Engine(model, params, conf)
+    t0 = time.time()
+    outs = eng.generate(prompts, max_new_tokens=max_new, ignore_eos=True)
+    dt = time.time() - t0
+    toks = sum(len(o.output) for o in outs)
+    rec = {
+        "requests": len(outs), "tokens": toks, "wall_s": dt,
+        "tok_per_s_interpret": toks / dt if dt else 0.0,
+        "ttft_s": _pct([o.ttft for o in outs]),
+        "tpot_s": _pct([o.tpot for o in outs if o.tpot > 0]),
+        "latency_s": _pct([o.latency for o in outs]),
+        "peak_active": eng.stats.peak_active,
+        "finish_reasons": sorted({o.finish_reason.value for o in outs}),
+    }
+    return eng, outs, rec
+
+
+def _cache_bytes(cfg, eng, conf) -> int:
+    if eng.layout == "paged":
+        return MM.paged_cache_bytes(cfg, eng.pc.num_pages, eng.pc.page_size,
+                                    dtype=eng.cache_dtype,
+                                    kv_quant=eng.kv_quant)
+    return MM.slot_cache_bytes(cfg, conf.batch_slots, conf.max_len,
+                               dtype=eng.cache_dtype, kv_quant=eng.kv_quant)
 
 
 def run():
@@ -54,31 +93,56 @@ def run():
 
     lines, records = [], []
     for layout in ("slot", "paged"):
-        eng = Engine(model, qparams, EngineConfig(
-            batch_slots=4, max_len=128, kernels=kern, eos_id=-1,
-            cache=layout, page_size=16))
-        t0 = time.time()
-        outs = eng.generate(prompts, max_new_tokens=MAX_NEW, ignore_eos=True)
-        dt = time.time() - t0
-        toks = sum(len(o.output) for o in outs)
-        ttft = _pct([o.ttft for o in outs])
-        tpot = _pct([o.tpot for o in outs if o.tpot > 0])
-        lat = _pct([o.latency for o in outs])
-        rec = {"layout": layout, "requests": len(outs), "tokens": toks,
-               "wall_s": dt, "tok_per_s_interpret": toks / dt if dt else 0.0,
-               "ttft_s": ttft, "tpot_s": tpot, "latency_s": lat,
-               "finish_reasons": sorted({o.finish_reason.value
-                                         for o in outs})}
+        conf = EngineConfig(batch_slots=4, max_len=128, kernels=kern,
+                            eos_id=-1, cache=layout, page_size=16)
+        eng, outs, rec = _run_engine(model, qparams, conf, prompts, MAX_NEW)
+        rec = {"layout": layout, "kv_quant": "fp32",
+               "cache_bytes": _cache_bytes(cfg, eng, conf), **rec}
         if layout == "paged":
             rec["prefix_hit_pages"] = eng.stats.prefix_hit_pages
             rec["prefix_hit_tokens"] = eng.stats.prefix_hit_tokens
         records.append(rec)
+        ttft, tpot, lat = rec["ttft_s"], rec["tpot_s"], rec["latency_s"]
         lines.append(
-            f"serving/{layout},{dt * 1e6 / max(toks, 1):.0f},"
-            f"reqs={len(outs)}|toks={toks}|"
+            f"serving/{layout},{rec['wall_s'] * 1e6 / max(rec['tokens'], 1):.0f},"
+            f"reqs={rec['requests']}|toks={rec['tokens']}|"
             f"tok_per_s={rec['tok_per_s_interpret']:.2f}|"
             f"ttft_p50_s={ttft['p50']:.3f}|ttft_p99_s={ttft['p99']:.3f}|"
             f"tpot_p50_s={tpot['p50']:.3f}|lat_p99_s={lat['p99']:.3f}")
+
+    # ---- KV-quant capacity: same byte budget, bf16 vs int8 page pools ----
+    budget = CAP_BUDGET_PAGES_BF16 * page_bytes(
+        cfg.num_layers, cfg.num_kv_heads, cfg.head_dim, CAP_PAGE_SIZE,
+        kv_quant=KVQuantConfig(dtype="bf16"))
+    rng = np.random.default_rng(7)
+    cap_prompts = [rng.integers(2, cfg.vocab_size,
+                                size=CAP_PROMPT_LEN).tolist()
+                   for _ in range(N_REQUESTS)]
+    baseline = None
+    for mode in ("bf16", "int8"):
+        conf = EngineConfig(batch_slots=N_REQUESTS, max_len=128, kernels=kern,
+                            eos_id=-1, cache="paged",
+                            page_size=CAP_PAGE_SIZE, kv_quant=mode,
+                            page_pool_bytes=budget)
+        eng, outs, rec = _run_engine(model, qparams, conf, cap_prompts,
+                                     CAP_MAX_NEW)
+        rec = {"section": "kv_capacity", "layout": "paged", "kv_quant": mode,
+               "page_pool_bytes": budget, "num_pages": eng.pc.num_pages,
+               "cache_bytes": _cache_bytes(cfg, eng, conf), **rec}
+        if mode == "bf16":
+            baseline = outs
+        else:
+            rec["greedy_tokens_match_bf16"] = (
+                [o.output for o in outs] == [o.output for o in baseline])
+        records.append(rec)
+        lines.append(
+            f"serving/kv_capacity_{mode},"
+            f"{rec['wall_s'] * 1e6 / max(rec['tokens'], 1):.0f},"
+            f"budget_B={budget}|num_pages={rec['num_pages']}|"
+            f"peak_active={rec['peak_active']}|"
+            f"ttft_p50_s={rec['ttft_s']['p50']:.3f}|"
+            f"tpot_p50_s={rec['tpot_s']['p50']:.3f}")
+
     try:
         with open(JSON_PATH, "w") as f:
             json.dump(records, f, indent=1)

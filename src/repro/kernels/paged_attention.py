@@ -19,6 +19,12 @@ substrate is built on, mapped to TPU idiom:
 * Pages past a sequence's length (block-table padding points at the null
   page) still execute structurally but are fully masked, mirroring the
   flash kernel's masked-tile convention.
+* **Fused int8-KV dequantization** (ISSUE 4) — with ``k_scales``/``v_scales``
+  the K/V pools hold int8 payloads and the kernel DMAs the page *plus its
+  scales* into VMEM, rescaling inside the online-softmax loop: a floating-
+  point copy of the KV cache never exists in HBM.  Scale pools are parallel
+  to the page pools — ``(P, page_size, Hkv)`` per-token or ``(P, Hkv)``
+  per-page symmetric scales (``serving/kv_quant.py``).
 
 ``kernels/ref.py::paged_attention_ref`` is the jnp oracle; ``interpret=True``
 (the default) runs this same kernel through the Pallas interpreter on CPU.
@@ -34,9 +40,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, page_size, scale):
-    b = pl.program_id(0)
+def _page_update(q, k, v, b, o_ref, m_ref, l_ref, acc_ref, len_ref, *,
+                 page_size, scale):
+    """One page of the online softmax: q (rep, D); k, v (page_size, D) fp32
+    in VMEM (already dequantized on the int8 path)."""
     p = pl.program_id(2)
 
     @pl.when(p == 0)
@@ -45,9 +52,6 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)                  # (rep, D)
-    k = k_ref[0, :, 0].astype(jnp.float32)               # (page_size, D)
-    v = v_ref[0, :, 0].astype(jnp.float32)               # (page_size, D)
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
     kpos = p * page_size + jax.lax.broadcasted_iota(
         jnp.int32, s.shape, dimension=1)
@@ -70,40 +74,97 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
+def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, page_size, scale):
+    b = pl.program_id(0)
+    q = q_ref[0, 0].astype(jnp.float32)                  # (rep, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (page_size, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)               # (page_size, D)
+    _page_update(q, k, v, b, o_ref, m_ref, l_ref, acc_ref, len_ref,
+                 page_size=page_size, scale=scale)
+
+
+def _kernel_quant(bt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, page_size, scale, per_page):
+    """Int8-KV variant: the page DMA brings the quantized payload plus its
+    scales into VMEM and the dequantization happens here, inside the online-
+    softmax page loop — no fp KV is ever materialized."""
+    b = pl.program_id(0)
+    q = q_ref[0, 0].astype(jnp.float32)                  # (rep, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (page_size, D) int8
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    if per_page:                                         # one scale per page
+        ks = ks_ref[0, 0].astype(jnp.float32)
+        vs = vs_ref[0, 0].astype(jnp.float32)
+        k = k * ks
+        v = v * vs
+    else:                                                # one per token
+        ks = ks_ref[0, :, 0].astype(jnp.float32)         # (page_size,)
+        vs = vs_ref[0, :, 0].astype(jnp.float32)
+        k = k * ks[:, None]
+        v = v * vs[:, None]
+    _page_update(q, k, v, b, o_ref, m_ref, l_ref, acc_ref, len_ref,
+                 page_size=page_size, scale=scale)
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
                     block_tables: jnp.ndarray, lengths: jnp.ndarray, *,
+                    k_scales: jnp.ndarray | None = None,
+                    v_scales: jnp.ndarray | None = None,
                     scale: float | None = None,
                     interpret: bool = True) -> jnp.ndarray:
     """Single-token decode attention over a paged KV pool.
 
     q            : (B, H, D) — one query token per sequence.
-    k_pages/v_pages: (P, page_size, Hkv, D) physical page pools.
+    k_pages/v_pages: (P, page_size, Hkv, D) physical page pools (int8 when
+                   ``k_scales``/``v_scales`` are given).
     block_tables : (B, max_pages) int32 — logical page i of sequence b lives
                    in physical page ``block_tables[b, i]``; padding entries
                    must point at a valid (e.g. null) page.
     lengths      : (B,) int32 — keys at logical positions < lengths[b] attend
                    (the just-written decode token included).
+    k_scales/v_scales: optional symmetric dequant scales parallel to the
+                   pools — (P, page_size, Hkv) per-token or (P, Hkv)
+                   per-page; dequantization is fused into the page loop.
     Returns (B, H, D).
     """
     b, h, d = q.shape
     _, page_size, hkv, _ = k_pages.shape
     assert h % hkv == 0, (h, hkv)
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("pass both k_scales and v_scales, or neither")
     rep = h // hkv
     max_pages = block_tables.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
 
     qg = q.reshape(b, hkv, rep, d)
+    in_specs = [
+        pl.BlockSpec((1, 1, rep, d), lambda b, h, p, bt, ln: (b, h, 0, 0)),
+        pl.BlockSpec((1, page_size, 1, d),
+                     lambda b, h, p, bt, ln: (bt[b, p], 0, h, 0)),
+        pl.BlockSpec((1, page_size, 1, d),
+                     lambda b, h, p, bt, ln: (bt[b, p], 0, h, 0)),
+    ]
+    inputs = [qg, k_pages, v_pages]
+    if k_scales is None:
+        kernel = functools.partial(_kernel, page_size=page_size, scale=scale)
+    else:
+        per_page = k_scales.ndim == 2          # (P, Hkv) vs (P, ps, Hkv)
+        if per_page:
+            scale_spec = pl.BlockSpec((1, 1),
+                                      lambda b, h, p, bt, ln: (bt[b, p], h))
+        else:
+            scale_spec = pl.BlockSpec((1, page_size, 1),
+                                      lambda b, h, p, bt, ln: (bt[b, p], 0, h))
+        in_specs += [scale_spec, scale_spec]
+        inputs += [k_scales, v_scales]
+        kernel = functools.partial(_kernel_quant, page_size=page_size,
+                                   scale=scale, per_page=per_page)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, hkv, max_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, rep, d), lambda b, h, p, bt, ln: (b, h, 0, 0)),
-            pl.BlockSpec((1, page_size, 1, d),
-                         lambda b, h, p, bt, ln: (bt[b, p], 0, h, 0)),
-            pl.BlockSpec((1, page_size, 1, d),
-                         lambda b, h, p, bt, ln: (bt[b, p], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, rep, d),
                                lambda b, h, p, bt, ln: (b, h, 0, 0)),
         scratch_shapes=[pltpu.VMEM((rep,), jnp.float32),
@@ -111,10 +172,9 @@ def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
                         pltpu.VMEM((rep, d), jnp.float32)],
     )
     out = pl.pallas_call(
-        functools.partial(_kernel, page_size=page_size, scale=scale),
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, rep, d), q.dtype),
         interpret=interpret,
-    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
-      qg, k_pages, v_pages)
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), *inputs)
     return out.reshape(b, h, d)

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import packing
+from repro.serving import kv_quant
 
 
 def gptq_matmul_ref(x: jnp.ndarray, qweight: jnp.ndarray, scales: jnp.ndarray,
@@ -83,11 +84,22 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
 def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                         v_pages: jnp.ndarray, block_tables: jnp.ndarray,
                         lengths: jnp.ndarray, *,
+                        k_scales: jnp.ndarray | None = None,
+                        v_scales: jnp.ndarray | None = None,
                         scale: float | None = None) -> jnp.ndarray:
     """Oracle for ``kernels/paged_attention.py``: gather every sequence's
     pages into a contiguous (B, max_pages*page_size, Hkv, D) view, then run
     masked grouped attention.  q: (B, H, D); k/v_pages: (P, ps, Hkv, D);
-    block_tables: (B, max_pages) int32; lengths: (B,) int32. -> (B, H, D)."""
+    block_tables: (B, max_pages) int32; lengths: (B,) int32. -> (B, H, D).
+
+    ``k_scales``/``v_scales`` — (P, ps, Hkv) per-token or (P, Hkv) per-page
+    symmetric scales for int8 pools (``serving/kv_quant.py``): the oracle
+    simply materializes the dequantized pools, which the kernel never does."""
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("pass both k_scales and v_scales, or neither")
+    if k_scales is not None:
+        k_pages = kv_quant.dequantize(k_pages, k_scales, dtype=jnp.float32)
+        v_pages = kv_quant.dequantize(v_pages, v_scales, dtype=jnp.float32)
     b, h, d = q.shape
     _, ps, hkv, _ = k_pages.shape
     rep = h // hkv

@@ -35,7 +35,8 @@ def build_engine(args):
                           block_sizes=(8, 64, 64))
     eng = Engine(model, qparams, EngineConfig(
         batch_slots=args.slots, max_len=args.max_len, kernels=kern,
-        eos_id=-1, cache=args.cache, page_size=args.page_size))
+        eos_id=-1, cache=args.cache, page_size=args.page_size,
+        kv_quant=args.kv_quant))
     return cfg, eng
 
 
@@ -92,6 +93,10 @@ def main(argv=None):
                     help="KV layout: fixed slots or PagedAttention block "
                          "tables (DESIGN.md §10)")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--kv-quant", choices=("fp32", "bf16", "int8"),
+                    default=None, dest="kv_quant",
+                    help="KV-cache storage: fp passthrough or int8 with "
+                         "fused per-token scales (DESIGN.md §12)")
     ap.add_argument("--serve", action="store_true",
                     help="run the OpenAI-style /v1/completions HTTP "
                          "front-end instead of the offline request stream")

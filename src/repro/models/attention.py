@@ -15,6 +15,14 @@ Cache layouts (DESIGN.md §2/§10):
   sliding window : ring buffers (B, window + num_sink, Hkv, D); the first
                    num_sink slots pin attention sinks (hymba meta tokens)
   MLA            : compressed (B, max_len, kv_lora + rope_dim)
+
+Quantized KV (DESIGN.md §12): with ``kv_quant`` the full-attention caches
+store int8 payloads plus parallel per-token symmetric scale arrays
+(``k_scale``/``v_scale`` slot, ``k_scales``/``v_scales`` paged); writes
+quantize in the same fused scatter and reads rescale inside the attention
+math (``attend``'s grouped path folds K scales into the logits and V scales
+into the probabilities; the paged decode kernel dequantizes in VMEM) — a
+floating-point copy of the cache is never materialized on the hot path.
 """
 from __future__ import annotations
 
@@ -27,6 +35,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.kernels import paged_attention as PA
 from repro.models import layers as L
+from repro.serving import kv_quant as KQ
 
 Q_CHUNK = 2048          # max query rows per logits block
 NEG_INF = -1e30
@@ -48,7 +57,7 @@ def _mask(qpos, kpos, valid, *, causal: bool, window: int, num_sink: int):
 
 
 def _attend_block(q, k, v, qpos, kpos, valid, *, causal, window, num_sink,
-                  scale, grouped: bool = False):
+                  scale, grouped: bool = False, k_scale=None, v_scale=None):
     """q: (B, Sq, H, D); k, v: (B, Sk, Hkv, Dk/Dv).
 
     Train/prefill (``grouped=False``): K/V repeated to H heads so logits shard
@@ -56,21 +65,44 @@ def _attend_block(q, k, v, qpos, kpos, valid, *, causal, window, num_sink,
     Decode (``grouped=True``): grouped-GQA einsum keeps the K/V cache in its
     native layout — no repeat, no cache resharding (§Perf cell B iteration 4).
     All einsums take bf16 operands with f32 accumulation — an f32 copy of the
-    (large) K/V cache is never materialized (§Perf cell B iteration 2)."""
+    (large) K/V cache is never materialized (§Perf cell B iteration 2).
+
+    Quantized KV (``k_scale``/``v_scale``: (B, Sk, Hkv) per-token symmetric
+    scales over int8 k/v): the grouped path folds the K scales into the
+    logits after the QK product and the V scales into the probabilities
+    before the PV product — mathematically identical to dequantizing the
+    cache, without ever building the fp copy."""
     b, sq, h, d = q.shape
     hkv = k.shape[2]
     rep = h // hkv
     m = _mask(qpos, kpos, valid, causal=causal, window=window,
               num_sink=num_sink)
-    if grouped and rep > 1:
+    # the grouped einsum also hosts the fused-dequant path at rep == 1
+    if grouped and (rep > 1 or k_scale is not None):
         qg = q.reshape(b, sq, hkv, rep, d)
-        logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
+        kk = k if k_scale is None else k.astype(jnp.float32)
+        logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, kk,
                             preferred_element_type=jnp.float32) * scale
+        if k_scale is not None:       # (B, Sk, Hkv) -> (B, Hkv, 1, 1, Sk)
+            logits = logits * k_scale.astype(jnp.float32).transpose(
+                0, 2, 1)[:, :, None, None, :]
         logits = jnp.where(m[:, None, None], logits, NEG_INF)
         p = jax.nn.softmax(logits, axis=-1)
-        out = jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(v.dtype), v,
-                         preferred_element_type=jnp.float32)
+        if v_scale is not None:
+            pv = p * v_scale.astype(jnp.float32).transpose(
+                0, 2, 1)[:, :, None, None, :]
+            out = jnp.einsum("bgrqk,bkgd->bqgrd", pv,
+                             v.astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
+        else:
+            out = jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(v.dtype), v,
+                             preferred_element_type=jnp.float32)
         return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+    if k_scale is not None:
+        # prefill route: dequantize up front — the same order of extra fp
+        # bytes this branch already spends on GQA head repetition
+        k = KQ.dequantize(k, k_scale, dtype=q.dtype)
+        v = KQ.dequantize(v, v_scale, dtype=q.dtype)
     if rep > 1:
         k = L.constrain_heads(jnp.repeat(k, rep, axis=2))
         v = L.constrain_heads(jnp.repeat(v, rep, axis=2))
@@ -85,19 +117,22 @@ def _attend_block(q, k, v, qpos, kpos, valid, *, causal, window, num_sink,
 
 
 def attend(q, k, v, *, qpos, kpos=None, valid=None, causal=True, window=0,
-           num_sink=0, scale=None, chunk=Q_CHUNK, grouped=False):
+           num_sink=0, scale=None, chunk=Q_CHUNK, grouped=False,
+           k_scale=None, v_scale=None):
     """Unified masked attention with query chunking.
 
     q (B,Sq,H,D); k,v (B,Sk,Hkv,·); qpos (B,Sq) absolute query positions;
     kpos (B,Sk) absolute key positions (default arange); valid (B,Sk) marks
-    live cache slots."""
+    live cache slots; k_scale/v_scale (B,Sk,Hkv) mark k/v as int8 payloads
+    with per-token symmetric dequant scales (fused — see _attend_block)."""
     b, sq, h, d = q.shape
     sk = k.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
     if kpos is None:
         kpos = jnp.broadcast_to(jnp.arange(sk, dtype=jnp.int32)[None], (b, sk))
     fn = functools.partial(_attend_block, causal=causal, window=window,
-                           num_sink=num_sink, scale=scale, grouped=grouped)
+                           num_sink=num_sink, scale=scale, grouped=grouped,
+                           k_scale=k_scale, v_scale=v_scale)
     if sq <= chunk or sq % chunk != 0:
         return fn(q, k, v, qpos, kpos, valid)
     nc = sq // chunk
@@ -162,6 +197,7 @@ def gqa_apply(p, x, *, cfg: ModelConfig, kernels=L.DEFAULT_KERNELS,
         assert block_tables is not None, "paged cache requires block_tables"
         assert window == 0 and num_sink == 0, "paged layout is full-attn only"
         kp, vp = cache["k_pages"], cache["v_pages"]
+        ksc, vsc = cache.get("k_scales"), cache.get("v_scales")
         ps = kp.shape[1]
         maxp = block_tables.shape[1]
         tpos = seq_lens[:, None] + jnp.arange(s)[None, :]          # (B, S) abs
@@ -172,21 +208,38 @@ def gqa_apply(p, x, *, cfg: ModelConfig, kernels=L.DEFAULT_KERNELS,
                               pages, 0)                            # null page
         offs = tpos % ps
         # one scatter per pool per layer-call: every new token's KV lands in
-        # its (page, offset) cell in a single batched write
-        kp = kp.at[pages, offs].set(k.astype(kp.dtype))
-        vp = vp.at[pages, offs].set(v.astype(vp.dtype))
+        # its (page, offset) cell in a single batched write — quantize-on-
+        # write when the pool carries scale arrays (per-token granularity)
+        if ksc is not None:
+            kq, kss = KQ.quantize(k, scale_dtype=ksc.dtype)
+            vq, vss = KQ.quantize(v, scale_dtype=vsc.dtype)
+            kp = kp.at[pages, offs].set(kq)
+            vp = vp.at[pages, offs].set(vq)
+            ksc = ksc.at[pages, offs].set(kss)
+            vsc = vsc.at[pages, offs].set(vss)
+        else:
+            kp = kp.at[pages, offs].set(k.astype(kp.dtype))
+            vp = vp.at[pages, offs].set(v.astype(vp.dtype))
         if s == 1 and kernels.paged_attention_impl == "kernel":
             out = PA.paged_attention(q[:, 0], kp, vp, block_tables,
-                                     seq_lens + 1)[:, None]
+                                     seq_lens + 1, k_scales=ksc,
+                                     v_scales=vsc)[:, None]
         else:
             hkv = k.shape[2]
-            k_all = kp[block_tables].reshape(b, -1, hkv, hd).astype(k.dtype)
-            v_all = vp[block_tables].reshape(b, -1, hkv, hd).astype(v.dtype)
+            k_all, v_all = kp[block_tables], vp[block_tables]
+            if ksc is not None:       # gather scales with their pages
+                k_all = KQ.dequantize(k_all, ksc[block_tables], dtype=k.dtype)
+                v_all = KQ.dequantize(v_all, vsc[block_tables], dtype=v.dtype)
+            k_all = k_all.reshape(b, -1, hkv, hd).astype(k.dtype)
+            v_all = v_all.reshape(b, -1, hkv, hd).astype(v.dtype)
             out = attend(q, k_all, v_all, qpos=tpos, causal=True, chunk=chunk,
                          grouped=s <= 8)
         new_cache = {"k_pages": kp, "v_pages": vp}
+        if ksc is not None:
+            new_cache.update(k_scales=ksc, v_scales=vsc)
     else:
         kc, vc = cache["k"], cache["v"]
+        ksl, vsl = cache.get("k_scale"), cache.get("v_scale")
         cap = kc.shape[1]
         is_ring = bool(window) and cap == window + num_sink
         bidx = jnp.arange(b)[:, None]
@@ -216,11 +269,22 @@ def gqa_apply(p, x, *, cfg: ModelConfig, kernels=L.DEFAULT_KERNELS,
             vc = vc.at[bidx, slot].set(v.astype(vc.dtype))
         else:
             slot = jnp.minimum(tpos, cap - 1)
-            kc = kc.at[bidx, slot].set(k.astype(kc.dtype))
-            vc = vc.at[bidx, slot].set(v.astype(vc.dtype))
+            if ksl is not None:       # quantize-on-write, per-token scales
+                kq, kss = KQ.quantize(k, scale_dtype=ksl.dtype)
+                vq, vss = KQ.quantize(v, scale_dtype=vsl.dtype)
+                kc = kc.at[bidx, slot].set(kq)
+                vc = vc.at[bidx, slot].set(vq)
+                ksl = ksl.at[bidx, slot].set(kss)
+                vsl = vsl.at[bidx, slot].set(vss)
+            else:
+                kc = kc.at[bidx, slot].set(k.astype(kc.dtype))
+                vc = vc.at[bidx, slot].set(v.astype(vc.dtype))
             out = attend(q, kc, vc, qpos=tpos, causal=True, window=window,
-                         num_sink=num_sink, chunk=chunk, grouped=s <= 8)
+                         num_sink=num_sink, chunk=chunk, grouped=s <= 8,
+                         k_scale=ksl, v_scale=vsl)
         new_cache = {"k": kc, "v": vc}
+        if ksl is not None:
+            new_cache.update(k_scale=ksl, v_scale=vsl)
     out = out.reshape(b, s, cfg.num_heads * hd)
     return L.linear(p["wo"], out, name="wo", kernels=kernels), new_cache
 
@@ -327,9 +391,23 @@ def mla_apply(p, x, *, cfg: ModelConfig, kernels=L.DEFAULT_KERNELS,
 
 # ----------------------------------------------------------------- cache inits
 def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int, *,
-                   window: int = 0, num_sink: int = 0, dtype=jnp.bfloat16):
+                   window: int = 0, num_sink: int = 0, dtype=jnp.bfloat16,
+                   kv_quant=None):
     cap = min(max_len, window + num_sink) if window else max_len
     shape = (batch, cap, cfg.num_kv_heads, cfg.head_dim)
+    if kv_quant is not None and kv_quant.quantized:
+        if window:
+            raise ValueError(
+                "quantized KV does not support sliding-window ring caches")
+        if kv_quant.granularity != "token":
+            raise ValueError(
+                "the slot cache stores per-token scales; per-page scales "
+                "exist only in the paged layout")
+        sdt = kv_quant.scale_jnp_dtype
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:-1], sdt),
+                "v_scale": jnp.zeros(shape[:-1], sdt)}
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 

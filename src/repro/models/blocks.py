@@ -100,7 +100,12 @@ def block_init(rng, cfg: ModelConfig, kind: BlockKind, dtype=jnp.float32):
 
 
 def block_cache_init(cfg: ModelConfig, kind: BlockKind, batch: int,
-                     max_len: int, dtype=jnp.bfloat16):
+                     max_len: int, dtype=jnp.bfloat16, kv_quant=None):
+    quantized = kv_quant is not None and kv_quant.quantized
+    if quantized and (kind.attn != "full" or kind.ssm):
+        raise ValueError(
+            f"quantized KV (kv_quant) supports full-attention GQA blocks "
+            f"only, got attn={kind.attn!r} ssm={kind.ssm}")
     c: dict = {}
     if kind.attn == "mla":
         c["attn"] = A.init_mla_cache(cfg, batch, max_len, dtype)
@@ -109,29 +114,42 @@ def block_cache_init(cfg: ModelConfig, kind: BlockKind, batch: int,
                                      window=cfg.sliding_window,
                                      num_sink=cfg.meta_tokens, dtype=dtype)
     elif kind.attn == "full":
-        c["attn"] = A.init_gqa_cache(cfg, batch, max_len, dtype=dtype)
+        c["attn"] = A.init_gqa_cache(cfg, batch, max_len, dtype=dtype,
+                                     kv_quant=kv_quant)
     if kind.ssm:
         c["ssm"] = M.init_mamba_cache(cfg, batch, dtype)
     return c
 
 
 def block_paged_cache_init(cfg: ModelConfig, kind: BlockKind, num_pages: int,
-                           page_size: int, dtype=jnp.bfloat16):
+                           page_size: int, dtype=jnp.bfloat16, kv_quant=None):
     """Paged-layout cache for one block: (num_pages + 1, page_size, Hkv, D)
-    physical pools (page 0 is the null page — see serving/kv_cache.py).
-    Only homogeneous full-attention stacks support paging."""
+    physical pools (page 0 is the null page — see serving/kv_cache.py), plus
+    (num_pages + 1, page_size, Hkv) per-token scale pools when ``kv_quant``
+    stores int8.  Only homogeneous full-attention stacks support paging."""
     if kind.attn != "full" or kind.ssm:
         raise ValueError(
             f"paged cache layout supports full-attention blocks only, got "
             f"attn={kind.attn!r} ssm={kind.ssm}")
     shape = (num_pages + 1, page_size, cfg.num_kv_heads, cfg.head_dim)
+    if kv_quant is not None and kv_quant.quantized:
+        if kv_quant.granularity != "token":
+            raise ValueError(
+                "the fused paged write path is per-token; per-page scales "
+                "are served by the PagedCache data-path API only")
+        sdt = kv_quant.scale_jnp_dtype
+        return {"attn": {"k_pages": jnp.zeros(shape, jnp.int8),
+                         "v_pages": jnp.zeros(shape, jnp.int8),
+                         "k_scales": jnp.zeros(shape[:-1], sdt),
+                         "v_scales": jnp.zeros(shape[:-1], sdt)}}
     return {"attn": {"k_pages": jnp.zeros(shape, dtype),
                      "v_pages": jnp.zeros(shape, dtype)}}
 
 
 def group_paged_cache_init(cfg, kind, count, num_pages, page_size,
-                           dtype=jnp.bfloat16):
-    one = block_paged_cache_init(cfg, kind, num_pages, page_size, dtype)
+                           dtype=jnp.bfloat16, kv_quant=None):
+    one = block_paged_cache_init(cfg, kind, num_pages, page_size, dtype,
+                                 kv_quant)
     return jax.tree_util.tree_map(
         lambda a: jnp.broadcast_to(a[None], (count,) + a.shape), one)
 
@@ -202,8 +220,9 @@ def group_init(rng, cfg: ModelConfig, count: int, kind: BlockKind,
     return jax.vmap(lambda r: block_init(r, cfg, kind, dtype))(rngs)
 
 
-def group_cache_init(cfg, kind, count, batch, max_len, dtype=jnp.bfloat16):
-    one = block_cache_init(cfg, kind, batch, max_len, dtype)
+def group_cache_init(cfg, kind, count, batch, max_len, dtype=jnp.bfloat16,
+                     kv_quant=None):
+    one = block_cache_init(cfg, kind, batch, max_len, dtype, kv_quant)
     return jax.tree_util.tree_map(
         lambda a: jnp.broadcast_to(a[None], (count,) + a.shape), one)
 

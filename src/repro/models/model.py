@@ -126,29 +126,35 @@ class LM:
         return self._logits(params, x), new_cache, aux_total
 
     # ------------------------------------------------------------------- cache
-    def init_cache(self, batch_size: int, max_len: int, dtype=jnp.bfloat16):
+    def init_cache(self, batch_size: int, max_len: int, dtype=jnp.bfloat16,
+                   kv_quant=None):
+        """Slot-layout cache tree.  ``kv_quant`` (a quantized
+        ``serving/kv_quant.py::KVQuantConfig``) switches the attention
+        payloads to int8 with parallel per-token scale arrays — full-attention
+        GQA stacks only (DESIGN.md §12)."""
         cfg = self.cfg
         cache = {}
         total = max_len + cfg.meta_tokens
         for i, (count, kind) in enumerate(B.layer_groups(cfg)):
             cache[f"group{i}"] = B.group_cache_init(cfg, kind, count, batch_size,
-                                                    total, dtype)
+                                                    total, dtype, kv_quant)
         return cache
 
     def init_paged_cache(self, num_pages: int, page_size: int,
-                         dtype=jnp.bfloat16):
+                         dtype=jnp.bfloat16, kv_quant=None):
         """Paged-layout cache tree (DESIGN.md §10): per-group physical page
         pools addressed by a shared block table.  Requires a homogeneous
-        full-attention stack with no meta tokens.  The dtype default mirrors
-        ``init_cache``; the serving engine always passes
-        ``kv_cache.DEFAULT_CACHE_DTYPE`` explicitly."""
+        full-attention stack with no meta tokens.  ``kv_quant`` adds int8
+        pools with parallel per-token scale pools (DESIGN.md §12).  The
+        dtype default mirrors ``init_cache``; the serving engine always
+        passes ``kv_cache.DEFAULT_CACHE_DTYPE`` explicitly."""
         cfg = self.cfg
         if cfg.meta_tokens:
             raise ValueError("paged cache layout does not support meta tokens")
         cache = {}
         for i, (count, kind) in enumerate(B.layer_groups(cfg)):
             cache[f"group{i}"] = B.group_paged_cache_init(
-                cfg, kind, count, num_pages, page_size, dtype)
+                cfg, kind, count, num_pages, page_size, dtype, kv_quant)
         return cache
 
     # -------------------------------------------------------------------- loss

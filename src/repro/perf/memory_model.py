@@ -11,6 +11,12 @@ Static state (params / optimizer / gradients / KV caches) is computed EXACTLY
 from each leaf's PartitionSpec (ceil-division per sharded dim — padding
 included). Activations use a structural peak model of the compiled program:
 remat residual stack + one layer's live working set + chunked loss block.
+
+Serving-side KV accounting (ISSUE 4 satellite): ``slot_cache_bytes`` /
+``paged_cache_bytes`` give the exact footprint of either cache layout at any
+dtype × quant mode (scale pools included), and ``kv_cache_report`` tabulates
+the whole layout × dtype × quant grid — the numbers behind the int8-KV
+capacity claim (2x vs bf16, 4x vs fp32 tokens per byte).
 """
 from __future__ import annotations
 
@@ -21,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.serving import kv_quant as KQ
 
 
 def _leaf_device_bytes(leaf, sharding, mesh) -> int:
@@ -120,6 +127,67 @@ def activation_terms(cfg: ModelConfig, shape: ShapeConfig, mesh,
         loss_ws = b_loc * (1 if shape.kind == "decode" else 1) \
             * math.ceil(cfg.vocab_size / tp) * 4 * 2
     return float(resid), float(layer_ws + loss_ws)
+
+
+# -------------------------------------------------- serving KV-cache footprint
+def slot_cache_bytes(cfg: ModelConfig, batch_slots: int, max_len: int, *,
+                     dtype=jnp.float32, kv_quant=None) -> int:
+    """Exact slot-layout KV bytes (payload + per-token scale arrays)."""
+    return KQ.slot_bytes(cfg.num_layers, cfg.num_kv_heads, cfg.head_dim,
+                         batch_slots, max_len + cfg.meta_tokens,
+                         dtype=dtype, kv_quant=kv_quant)
+
+
+def paged_cache_bytes(cfg: ModelConfig, num_pages: int, page_size: int, *,
+                      dtype=jnp.float32, kv_quant=None) -> int:
+    """Exact paged-layout KV bytes — ``num_pages`` allocatable pages plus the
+    null page, scale pools included."""
+    return KQ.page_bytes(cfg.num_layers, cfg.num_kv_heads, cfg.head_dim,
+                         page_size, dtype=dtype,
+                         kv_quant=kv_quant) * (num_pages + 1)
+
+
+def kv_cache_report(cfg: ModelConfig, *, batch_slots: int, max_len: int,
+                    page_size: int, num_pages: int | None = None) -> list[dict]:
+    """KV-cache bytes per layout × dtype × quant mode.
+
+    One row per configuration: layout, mode (dtype [+ scale granularity]),
+    total bytes, bytes per cache token, and the capacity factor vs the same
+    layout at fp32 — how many times more tokens the same byte budget holds.
+    """
+    if num_pages is None:
+        num_pages = KQ.default_num_pages(batch_slots, max_len, page_size)
+    modes = [
+        ("fp32", None),
+        ("bf16", None),
+        ("int8/token", KQ.KVQuantConfig(dtype="int8", granularity="token")),
+        ("int8/page", KQ.KVQuantConfig(dtype="int8", granularity="page")),
+    ]
+    dtypes = {"fp32": jnp.float32, "bf16": jnp.bfloat16}
+    rows: list[dict] = []
+    for layout in ("slot", "paged"):
+        if layout == "slot":
+            tokens = batch_slots * (max_len + cfg.meta_tokens)
+        else:
+            tokens = (num_pages + 1) * page_size
+        base = None
+        for mode, kvq in modes:
+            if layout == "slot" and mode == "int8/page":
+                continue        # the slot cache stores per-token scales only
+            dt = dtypes.get(mode.split("/")[0], jnp.float32)
+            if layout == "slot":
+                nbytes = slot_cache_bytes(cfg, batch_slots, max_len,
+                                          dtype=dt, kv_quant=kvq)
+            else:
+                nbytes = paged_cache_bytes(cfg, num_pages, page_size,
+                                           dtype=dt, kv_quant=kvq)
+            base = base if base is not None else nbytes
+            rows.append({
+                "layout": layout, "mode": mode, "bytes": nbytes,
+                "bytes_per_token": nbytes / tokens,
+                "capacity_x_vs_fp32": base / nbytes,
+            })
+    return rows
 
 
 def estimate(cfg: ModelConfig, shape: ShapeConfig, mesh, *,

@@ -23,7 +23,10 @@ from __future__ import annotations
 import dataclasses
 import enum
 
+import jax.numpy as jnp
+
 from repro.models import layers as L
+from repro.serving.kv_quant import KVQuantConfig
 
 
 class RequestState(str, enum.Enum):
@@ -60,6 +63,13 @@ class EngineConfig:
     num_pages: int | None = None      # None -> batch_slots * ceil(max_len/page)
     cache_dtype: object = None        # None -> kv_cache.DEFAULT_CACHE_DTYPE
     seed: int = 0
+    # KV quantization (DESIGN.md §12): None, a KVQuantConfig, or a dtype
+    # string shorthand ("int8" / "bf16" / "fp32" — normalized to a config)
+    kv_quant: object = None
+    # paged layout: derive num_pages from a byte budget (payload + scale
+    # pools) instead of the capacity-equivalent default — the lever that
+    # turns int8 KV into a ~2x (vs bf16) / ~4x (vs fp32) deeper page pool
+    page_pool_bytes: int | None = None
 
     def __post_init__(self):
         if self.batch_slots <= 0:
@@ -75,6 +85,38 @@ class EngineConfig:
         layout = getattr(self.cache, "value", self.cache)
         if layout is not None and layout not in ("slot", "paged"):
             raise ValueError(f"unknown cache layout {self.cache!r}")
+        if isinstance(self.kv_quant, str):
+            # shorthand; KVQuantConfig rejects unknown dtype strings
+            object.__setattr__(self, "kv_quant",
+                               KVQuantConfig(dtype=self.kv_quant))
+        if self.kv_quant is not None:
+            if not isinstance(self.kv_quant, KVQuantConfig):
+                raise ValueError(
+                    f"kv_quant must be a KVQuantConfig or a dtype string, "
+                    f"got {self.kv_quant!r}")
+            if self.kv_quant.quantized:
+                if self.cache_dtype is not None:
+                    raise ValueError(
+                        f"kv_quant='int8' stores int8 payloads — "
+                        f"cache_dtype={self.cache_dtype!r} would be ignored; "
+                        f"pass one or the other")
+                if self.kv_quant.granularity != "token":
+                    raise ValueError(
+                        "the engine's fused write path uses per-token "
+                        "scales; per-page granularity is served by the "
+                        "PagedCache data-path API only")
+            elif (self.cache_dtype is not None
+                  and jnp.dtype(self.cache_dtype) != self.kv_quant.jnp_dtype):
+                raise ValueError(
+                    f"kv_quant passthrough dtype {self.kv_quant.dtype!r} "
+                    f"conflicts with cache_dtype={self.cache_dtype!r}")
+        if self.page_pool_bytes is not None:
+            if self.page_pool_bytes <= 0:
+                raise ValueError(
+                    f"page_pool_bytes must be > 0, got {self.page_pool_bytes}")
+            if self.num_pages is not None:
+                raise ValueError(
+                    "pass either num_pages or page_pool_bytes, not both")
 
 
 @dataclasses.dataclass

@@ -57,6 +57,7 @@ import numpy as np
 
 from repro.models import LM
 from repro.serving import kv_cache as KV
+from repro.serving import kv_quant as KQ
 from repro.serving.api import (EngineConfig, FinishReason, RequestOutput,
                                RequestState, StreamEvent)
 from repro.serving.sampler import SamplingParams, sample, sample_batched
@@ -73,6 +74,9 @@ class EngineStats:
     # of being re-prefilled
     prefix_hit_pages: int = 0
     prefix_hit_tokens: int = 0
+    # deepest concurrent batch ever admitted — the number int8 KV moves by
+    # widening the page pool under a fixed byte budget (DESIGN.md §12)
+    peak_active: int = 0
 
     @property
     def decode_throughput(self) -> float:
@@ -117,9 +121,19 @@ class Engine:
         self._next_rid = 0
         self._requests: dict[int, Request] = {}
         self._events: list[StreamEvent] = []
-        cache_dtype = config.cache_dtype if config.cache_dtype is not None \
-            else KV.DEFAULT_CACHE_DTYPE
-        self.cache_dtype = jnp.dtype(cache_dtype)
+        kvq = config.kv_quant            # normalized by EngineConfig
+        if kvq is not None and not kvq.quantized:
+            # fp passthrough is just another way to spell the cache dtype
+            cache_dtype = kvq.jnp_dtype
+            kvq = None
+        elif config.cache_dtype is not None:
+            cache_dtype = config.cache_dtype
+        else:
+            cache_dtype = KV.DEFAULT_CACHE_DTYPE
+        self.kv_quant = kvq
+        # what the cache payloads are stored as (int8 when quantized)
+        self.cache_dtype = jnp.dtype(jnp.int8) if kvq is not None \
+            else jnp.dtype(cache_dtype)
         batch_slots, max_len = config.batch_slots, config.max_len
         page_size, num_pages = config.page_size, config.num_pages
 
@@ -128,28 +142,38 @@ class Engine:
         self.layout = getattr(layout, "value", layout)
         if self.layout not in ("slot", "paged"):
             raise ValueError(f"unknown cache layout {layout!r}")
+        if config.page_pool_bytes is not None and self.layout != "paged":
+            raise ValueError(
+                "page_pool_bytes applies to the paged cache layout only")
 
         if self.layout == "paged":
             cfg = model.cfg
             max_pages = -(-max_len // page_size)
-            if num_pages is None:
-                # capacity-equivalent default: the slot cache's worst-case
-                # token budget, but shared across rows at page granularity
-                num_pages = batch_slots * max_pages
+            if config.page_pool_bytes is not None:
+                # byte-budget-derived pool: int8 KV buys ~2x (vs bf16) / ~4x
+                # (vs fp32) the pages — i.e. deeper continuous batching
+                num_pages = KQ.num_pages_for_budget(
+                    config.page_pool_bytes, cfg.num_layers, cfg.num_kv_heads,
+                    cfg.head_dim, page_size, dtype=cache_dtype, kv_quant=kvq)
+            elif num_pages is None:
+                num_pages = KQ.default_num_pages(batch_slots, max_len,
+                                                 page_size)
             # bookkeeping-only manager: page payloads live in the model cache
             # tree below; the manager owns the device block table + free lists
             self.pc = KV.PagedCache(
                 num_pages=num_pages, page_size=page_size,
                 n_layers=cfg.num_layers, kv_heads=cfg.num_kv_heads,
                 head_dim=cfg.head_dim, dtype=cache_dtype,
-                max_seqs=batch_slots, max_pages=max_pages, alloc_pools=False)
+                max_seqs=batch_slots, max_pages=max_pages, alloc_pools=False,
+                kv_quant=kvq)
             # raises for stacks paging can't serve (SSM/SWA/MLA/meta tokens)
             self.cache = model.init_paged_cache(num_pages, page_size,
-                                                dtype=cache_dtype)
+                                                dtype=cache_dtype,
+                                                kv_quant=kvq)
             self.slots = None
         else:
             self.slots = KV.SlotCache(model, batch_slots, max_len,
-                                      dtype=cache_dtype)
+                                      dtype=cache_dtype, kv_quant=kvq)
             self.pc = None
         self.batch_rows = batch_slots
         self.max_len = max_len
@@ -455,6 +479,8 @@ class Engine:
             del self._events[:len(self._events) - self._MAX_PENDING_EVENTS]
         finished: list[RequestOutput] = []
         self._admit(finished)
+        self.stats.peak_active = max(self.stats.peak_active,
+                                     len(self.sched.active))
         if not self.sched.active:
             return finished
         # host-side staging: last tokens + per-row sampling arrays (numpy,

@@ -19,6 +19,12 @@ Physical page 0 is the **null page**: never allocated, permanently
 refcounted, the target of block-table padding and of dead decode rows'
 writes.  ``num_pages`` counts *allocatable* pages, so pool arrays hold
 ``num_pages + 1`` physical pages.
+
+Both layouts take a ``kv_quant`` (``serving/kv_quant.py::KVQuantConfig``):
+int8 payloads with parallel symmetric-scale pools, quantize-on-write /
+dequantize-on-read fused into every data-path method (DESIGN.md §12).
+``PagedCache`` supports per-token *and* per-page scale granularity; scale
+pools ride along with their pages through copy-on-write and prefix sharing.
 """
 from __future__ import annotations
 
@@ -26,6 +32,8 @@ import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serving import kv_quant as KQ
 
 # The single source of the serving cache dtype: SlotCache, PagedCache and
 # Engine all default to this (the seed had SlotCache default to bfloat16
@@ -39,12 +47,15 @@ class SlotCache:
     """Fixed-slot cache wrapper around the model's init_cache tree."""
 
     def __init__(self, model, batch_slots: int, max_len: int,
-                 dtype=DEFAULT_CACHE_DTYPE):
+                 dtype=DEFAULT_CACHE_DTYPE, kv_quant=None):
         self.model = model
         self.batch_slots = batch_slots
         self.max_len = max_len
-        self.dtype = jnp.dtype(dtype)
-        self.cache = model.init_cache(batch_slots, max_len, dtype=dtype)
+        self.kv_quant = kv_quant
+        quantized = kv_quant is not None and kv_quant.quantized
+        self.dtype = jnp.dtype(jnp.int8) if quantized else jnp.dtype(dtype)
+        self.cache = model.init_cache(batch_slots, max_len, dtype=dtype,
+                                      kv_quant=kv_quant)
         self.seq_lens = jnp.zeros((batch_slots,), jnp.int32)
         self._free = list(range(batch_slots))[::-1]
         self._live: set[int] = set()
@@ -89,17 +100,29 @@ class PagedCache:
     alloc_pools: bool = True        # False: bookkeeping only — the engine
                                     # stores page payloads in the model cache
                                     # tree (init_paged_cache), not here
+    kv_quant: object = None         # KVQuantConfig: int8 pools + scale pools
 
     def __post_init__(self):
-        self.dtype = jnp.dtype(self.dtype if self.dtype is not None
-                               else DEFAULT_CACHE_DTYPE)
+        # compute_dtype: what gather_kv returns; dtype: what the pools store
+        self.compute_dtype = jnp.dtype(self.dtype if self.dtype is not None
+                                       else DEFAULT_CACHE_DTYPE)
+        quantized = self.kv_quant is not None and self.kv_quant.quantized
+        self.dtype = jnp.dtype(jnp.int8) if quantized else self.compute_dtype
         self.max_seqs = self.max_seqs or self.num_pages
         self.max_pages = self.max_pages or self.num_pages
         shape = (self.n_layers, self.num_pages + 1, self.page_size,
                  self.kv_heads, self.head_dim)
+        self.k_scales = self.v_scales = None
         if self.alloc_pools:
             self.k_pages = jnp.zeros(shape, self.dtype)
             self.v_pages = jnp.zeros(shape, self.dtype)
+            if quantized:
+                sshape = (self.n_layers,) + KQ.paged_scale_shape(
+                    self.num_pages, self.page_size, self.kv_heads,
+                    self.kv_quant.granularity)
+                sdt = self.kv_quant.scale_jnp_dtype
+                self.k_scales = jnp.zeros(sshape, sdt)
+                self.v_scales = jnp.zeros(sshape, sdt)
         else:
             self.k_pages = self.v_pages = None
         self.seq_lens = jnp.zeros((self.max_seqs,), jnp.int32)
@@ -277,6 +300,14 @@ class PagedCache:
                         self.k_pages[:, p])
                     self.v_pages = self.v_pages.at[:, q].set(
                         self.v_pages[:, p])
+                    if self.k_scales is not None:
+                        # scales travel with their pages: a COW'd payload
+                        # dequantized against the donor's scales would be
+                        # silently wrong after the follower rewrites either
+                        self.k_scales = self.k_scales.at[:, q].set(
+                            self.k_scales[:, p])
+                        self.v_scales = self.v_scales.at[:, q].set(
+                            self.v_scales[:, p])
                     self.refcount[p] -= 1
                     self.refcount[q] += 1
                     table[li] = q
@@ -287,25 +318,78 @@ class PagedCache:
             if dirty:
                 self._sync_row(seq_id)
 
+    @property
+    def quantized(self) -> bool:
+        return self.kv_quant is not None and self.kv_quant.quantized
+
+    def _write_page_mode(self, seq_id: int, start: int,
+                         k: jnp.ndarray, v: jnp.ndarray, layers):
+        """Per-page-granularity write: each touched page is requantized over
+        its whole valid extent with one (layer, page, head) scale — existing
+        tokens are dequantized against the old scale, overlaid with the new
+        span, and requantized (so appends into a partially-filled page keep
+        one coherent scale; the extra rounding is the storage trade-off of
+        per-page scales, DESIGN.md §12).  k, v: (len(layers), n, Hkv, D)."""
+        ps = self.page_size
+        n = k.shape[1]
+        table = self.tables[seq_id]
+        length = self.lengths[seq_id]
+        lsel = jnp.asarray(layers, jnp.int32)
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+        for li in range(start // ps, (start + n - 1) // ps + 1):
+            p = table[li]
+            lo = li * ps
+            valid = max(0, min(length, lo + ps) - lo)
+            kf = KQ.dequantize(self.k_pages[lsel, p], self.k_scales[lsel, p])
+            vf = KQ.dequantize(self.v_pages[lsel, p], self.v_scales[lsel, p])
+            a, bnd = max(start, lo), min(start + n, lo + ps)
+            kf = kf.at[:, a - lo:bnd - lo].set(k[:, a - start:bnd - start])
+            vf = vf.at[:, a - lo:bnd - lo].set(v[:, a - start:bnd - start])
+            # zero positions past the valid extent: stale payloads from a
+            # recycled page must not inflate the page's amax
+            mask = (jnp.arange(ps) < valid)[None, :, None, None]
+            kq, ks = KQ.quantize(kf * mask, axes=(1, 3),
+                                 scale_dtype=self.k_scales.dtype)
+            vq, vs = KQ.quantize(vf * mask, axes=(1, 3),
+                                 scale_dtype=self.v_scales.dtype)
+            self.k_pages = self.k_pages.at[lsel, p].set(kq)
+            self.v_pages = self.v_pages.at[lsel, p].set(vq)
+            self.k_scales = self.k_scales.at[lsel, p].set(ks)
+            self.v_scales = self.v_scales.at[lsel, p].set(vs)
+
     def write_tokens(self, seq_id: int, layer: int, start: int,
                      k: jnp.ndarray, v: jnp.ndarray):
         """k, v: (n, Hkv, D) written at logical positions [start, start+n).
 
         One batched scatter per (layer, call) — the seed's per-token
         ``.at[page, off].set()`` Python loop dispatched O(n) device ops.
-        Shared pages are copy-on-write-resolved first.
+        Shared pages are copy-on-write-resolved first.  Quantized caches
+        scatter int8 payloads plus their scales (per-token granularity) or
+        requantize the touched pages (per-page granularity).
         """
         self._require_pools()
         n = k.shape[0]
         self._ensure_writable(seq_id, start, start + n)
+        if self.quantized and self.kv_quant.granularity == "page":
+            self._write_page_mode(seq_id, start, k[None], v[None], [layer])
+            return
         table = np.asarray(self.tables[seq_id], np.int32)
         pos = np.arange(start, start + n)
         pages = jnp.asarray(table[pos // self.page_size])
         offs = jnp.asarray(pos % self.page_size)
-        self.k_pages = self.k_pages.at[layer, pages, offs].set(
-            k.astype(self.dtype))
-        self.v_pages = self.v_pages.at[layer, pages, offs].set(
-            v.astype(self.dtype))
+        if self.quantized:
+            kq, ks = KQ.quantize(k, scale_dtype=self.k_scales.dtype)
+            vq, vs = KQ.quantize(v, scale_dtype=self.v_scales.dtype)
+            self.k_pages = self.k_pages.at[layer, pages, offs].set(kq)
+            self.v_pages = self.v_pages.at[layer, pages, offs].set(vq)
+            self.k_scales = self.k_scales.at[layer, pages, offs].set(ks)
+            self.v_scales = self.v_scales.at[layer, pages, offs].set(vs)
+        else:
+            self.k_pages = self.k_pages.at[layer, pages, offs].set(
+                k.astype(self.dtype))
+            self.v_pages = self.v_pages.at[layer, pages, offs].set(
+                v.astype(self.dtype))
 
     def write_prefill(self, seq_id: int, start: int,
                       k: jnp.ndarray, v: jnp.ndarray):
@@ -314,14 +398,25 @@ class PagedCache:
         self._require_pools()
         n = k.shape[1]
         self._ensure_writable(seq_id, start, start + n)
+        if self.quantized and self.kv_quant.granularity == "page":
+            self._write_page_mode(seq_id, start, k, v, range(self.n_layers))
+            return
         table = np.asarray(self.tables[seq_id], np.int32)
         pos = np.arange(start, start + n)
         pages = jnp.asarray(table[pos // self.page_size])
         offs = jnp.asarray(pos % self.page_size)
-        self.k_pages = self.k_pages.at[:, pages, offs].set(
-            k.astype(self.dtype))
-        self.v_pages = self.v_pages.at[:, pages, offs].set(
-            v.astype(self.dtype))
+        if self.quantized:
+            kq, ks = KQ.quantize(k, scale_dtype=self.k_scales.dtype)
+            vq, vs = KQ.quantize(v, scale_dtype=self.v_scales.dtype)
+            self.k_pages = self.k_pages.at[:, pages, offs].set(kq)
+            self.v_pages = self.v_pages.at[:, pages, offs].set(vq)
+            self.k_scales = self.k_scales.at[:, pages, offs].set(ks)
+            self.v_scales = self.v_scales.at[:, pages, offs].set(vs)
+        else:
+            self.k_pages = self.k_pages.at[:, pages, offs].set(
+                k.astype(self.dtype))
+            self.v_pages = self.v_pages.at[:, pages, offs].set(
+                v.astype(self.dtype))
 
     def write_decode_token(self, seq_id: int, k: jnp.ndarray, v: jnp.ndarray):
         """Append one decode token's KV across every layer in one fused
@@ -329,16 +424,38 @@ class PagedCache:
         ``lengths[seq_id] - 1`` (call ``extend_seq`` first)."""
         self._require_pools()
         pos = self.lengths[seq_id] - 1
+        if self.quantized and self.kv_quant.granularity == "page":
+            self._write_page_mode(seq_id, pos, k[:, None], v[:, None],
+                                  range(self.n_layers))
+            return
         page = self.tables[seq_id][pos // self.page_size]
         off = pos % self.page_size
-        self.k_pages = self.k_pages.at[:, page, off].set(k.astype(self.dtype))
-        self.v_pages = self.v_pages.at[:, page, off].set(v.astype(self.dtype))
+        if self.quantized:
+            kq, ks = KQ.quantize(k, scale_dtype=self.k_scales.dtype)
+            vq, vs = KQ.quantize(v, scale_dtype=self.v_scales.dtype)
+            self.k_pages = self.k_pages.at[:, page, off].set(kq)
+            self.v_pages = self.v_pages.at[:, page, off].set(vq)
+            self.k_scales = self.k_scales.at[:, page, off].set(ks)
+            self.v_scales = self.v_scales.at[:, page, off].set(vs)
+        else:
+            self.k_pages = self.k_pages.at[:, page, off].set(
+                k.astype(self.dtype))
+            self.v_pages = self.v_pages.at[:, page, off].set(
+                v.astype(self.dtype))
 
     def gather_kv(self, seq_id: int, layer: int):
-        """Returns (k, v): (len, Hkv, D) gathered via the block table."""
+        """Returns (k, v): (len, Hkv, D) gathered via the block table —
+        dequantized to ``compute_dtype`` when the pools store int8."""
         self._require_pools()
         table = jnp.asarray(self.tables[seq_id], jnp.int32)
         length = self.lengths[seq_id]
-        k = self.k_pages[layer, table].reshape(-1, self.kv_heads, self.head_dim)
-        v = self.v_pages[layer, table].reshape(-1, self.kv_heads, self.head_dim)
+        k = self.k_pages[layer, table]
+        v = self.v_pages[layer, table]
+        if self.quantized:
+            k = KQ.dequantize(k, self.k_scales[layer, table],
+                              dtype=self.compute_dtype)
+            v = KQ.dequantize(v, self.v_scales[layer, table],
+                              dtype=self.compute_dtype)
+        k = k.reshape(-1, self.kv_heads, self.head_dim)
+        v = v.reshape(-1, self.kv_heads, self.head_dim)
         return k[:length], v[:length]
