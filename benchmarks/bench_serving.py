@@ -4,7 +4,10 @@ the streaming request-lifecycle API (``Engine.generate`` over a
 ShareGPT-like synthetic workload — the same statistics the paper's vLLM runs
 sample), plus the KV-quant capacity experiment: paged bf16 vs int8 KV under
 the *same page-pool byte budget*, recording the cache footprint, quant mode
-and the peak in-flight batch each mode sustains.
+and the peak in-flight batch each mode sustains, plus (ISSUE 5) the paged
+prefill gather-vs-kernel comparison: ttft percentiles and the analytic peak
+prefill transient (``prefill_ttft_s`` / ``prefill_peak_bytes``) with the
+contiguous-gather prefill vs the fused chunked paged-prefill kernel.
 
 Interpret-mode wall-clock on CPU: the numbers validate the serving harness
 and track the *relative* slot-vs-paged / bf16-vs-int8 trajectory across PRs,
@@ -109,6 +112,40 @@ def run():
             f"tok_per_s={rec['tok_per_s_interpret']:.2f}|"
             f"ttft_p50_s={ttft['p50']:.3f}|ttft_p99_s={ttft['p99']:.3f}|"
             f"tpot_p50_s={tpot['p50']:.3f}|lat_p99_s={lat['p99']:.3f}")
+
+    # ---- paged prefill: gather (ref) vs fused chunked kernel (ISSUE 5) ----
+    # same paged workload twice; records ttft (prefill-dominated) and the
+    # analytic peak prefill transient — the gather path's contiguous
+    # per-layer KV copy vs the kernel's zero HBM materialization
+    prefill_base = None
+    for impl in ("gather", "kernel"):
+        kern_i = L.KernelConfig(
+            strategy=OPT4GPTQ, use_pallas=True, block_sizes=(8, 64, 64),
+            paged_prefill_impl="ref" if impl == "gather" else "kernel")
+        conf = EngineConfig(batch_slots=4, max_len=128, kernels=kern_i,
+                            eos_id=-1, cache="paged", page_size=16)
+        eng, outs, rec = _run_engine(model, qparams, conf, prompts, MAX_NEW)
+        peak = MM.paged_prefill_peak_bytes(
+            cfg, batch=1, max_pages=eng.pc.max_pages,
+            page_size=eng.pc.page_size, dtype=eng.cache_dtype,
+            kv_quant=eng.kv_quant, impl=impl)
+        rec = {"section": "paged_prefill", "layout": "paged", "impl": impl,
+               "kv_quant": "fp32", "prefill_ttft_s": rec["ttft_s"],
+               "prefill_peak_bytes": peak,
+               "cache_bytes": _cache_bytes(cfg, eng, conf), **rec}
+        if impl == "gather":
+            prefill_base = outs
+        else:
+            rec["greedy_tokens_match_gather"] = (
+                [o.output for o in outs] == [o.output for o in prefill_base])
+        records.append(rec)
+        lines.append(
+            f"serving/paged_prefill_{impl},"
+            f"{rec['wall_s'] * 1e6 / max(rec['tokens'], 1):.0f},"
+            f"prefill_peak_B={peak}|"
+            f"ttft_p50_s={rec['prefill_ttft_s']['p50']:.3f}|"
+            f"ttft_p99_s={rec['prefill_ttft_s']['p99']:.3f}|"
+            f"tok_per_s={rec['tok_per_s_interpret']:.2f}")
 
     # ---- KV-quant capacity: same byte budget, bf16 vs int8 page pools ----
     budget = CAP_BUDGET_PAGES_BF16 * page_bytes(

@@ -1,6 +1,7 @@
-"""Pallas TPU paged-attention decode kernel (ISSUE 2 tentpole).
+"""Pallas TPU paged-attention kernels: decode (ISSUE 2) and chunked prefill
+(ISSUE 5).
 
-Decode over a paged KV cache: each sequence's keys/values live in
+Attention over a paged KV cache: each sequence's keys/values live in
 non-contiguous fixed-size pages of a shared physical pool, addressed through a
 per-sequence block table — the vLLM PagedAttention layout the paper's serving
 substrate is built on, mapped to TPU idiom:
@@ -26,8 +27,19 @@ substrate is built on, mapped to TPU idiom:
   to the page pools — ``(P, page_size, Hkv)`` per-token or ``(P, Hkv)``
   per-page symmetric scales (``serving/kv_quant.py``).
 
-``kernels/ref.py::paged_attention_ref`` is the jnp oracle; ``interpret=True``
-(the default) runs this same kernel through the Pallas interpreter on CPU.
+* **Chunked paged prefill** (ISSUE 5) — ``paged_prefill`` runs the *whole
+  suffix block* of a (possibly prefix-hit) prompt with online softmax
+  directly over the physical pool: grid **(B, Hkv, q-chunks, pages)**, the
+  query block a (chunk × rep, D) tile, the causal mask computed from the
+  scalar-prefetched per-row start offsets.  This removes the serving
+  stack's last materialized KV copy — the old prefill path gathered
+  ``kp[block_tables]`` into a contiguous (B, max_pages·page_size, Hkv, D)
+  view (and densely dequantized it when int8), doubling peak prefill
+  memory.  Both int8 scale granularities dequantize in VMEM here too.
+
+``kernels/ref.py::paged_attention_ref`` / ``paged_prefill_ref`` are the jnp
+oracles; ``interpret=True`` (the default) runs these same kernels through
+the Pallas interpreter on CPU.
 """
 from __future__ import annotations
 
@@ -40,26 +52,22 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _page_update(q, k, v, b, o_ref, m_ref, l_ref, acc_ref, len_ref, *,
-                 page_size, scale):
-    """One page of the online softmax: q (rep, D); k, v (page_size, D) fp32
-    in VMEM (already dequantized on the int8 path)."""
-    p = pl.program_id(2)
+def _sm_reset(m_ref, l_ref, acc_ref):
+    """Reset the online-softmax VMEM scratch at the first page."""
+    m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    @pl.when(p == 0)
-    def _():
-        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-    kpos = p * page_size + jax.lax.broadcasted_iota(
-        jnp.int32, s.shape, dimension=1)
-    s = jnp.where(kpos < len_ref[b], s, -jnp.inf)
-
+def _sm_update(s, v, m_ref, l_ref, acc_ref):
+    """One page of the online softmax, shared by the decode and prefill
+    kernels: ``s`` is the fully masked (rows, page_size) fp32 logit block,
+    ``v`` the (page_size, D) fp32 value page; the running max ``m``,
+    normalizer ``l`` and fp32 output accumulator live in VMEM scratch across
+    the page axis."""
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, s.max(axis=1))
-    # fully-masked pages keep m == -inf: use a 0-based exp and zero correction
+    # fully-masked rows keep m == -inf: use a 0-based exp and zero correction
     safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
     corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0)
     pr = jnp.where(jnp.isfinite(s), jnp.exp(s - safe_m[:, None]), 0.0)
@@ -68,10 +76,32 @@ def _page_update(q, k, v, b, o_ref, m_ref, l_ref, acc_ref, len_ref, *,
         pr, v, preferred_element_type=jnp.float32)
     m_ref[...] = m_new
 
+
+def _sm_flush(o_ref, m_ref, l_ref, acc_ref):
+    """Write back the normalized accumulator (zero for all-masked rows)."""
+    denom = jnp.maximum(l_ref[...], 1e-20)[:, None]
+    o_ref[...] = (acc_ref[...] / denom).astype(o_ref.dtype).reshape(o_ref.shape)
+
+
+def _page_update(q, k, v, b, o_ref, m_ref, l_ref, acc_ref, len_ref, *,
+                 page_size, scale):
+    """One decode page: q (rep, D); k, v (page_size, D) fp32 in VMEM (already
+    dequantized on the int8 path)."""
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _():
+        _sm_reset(m_ref, l_ref, acc_ref)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    kpos = p * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, dimension=1)
+    s = jnp.where(kpos < len_ref[b], s, -jnp.inf)
+    _sm_update(s, v, m_ref, l_ref, acc_ref)
+
     @pl.when(p == pl.num_programs(2) - 1)
     def _():
-        denom = jnp.maximum(l_ref[...], 1e-20)[:, None]
-        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+        _sm_flush(o_ref, m_ref, l_ref, acc_ref)
 
 
 def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
@@ -84,25 +114,28 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                  page_size=page_size, scale=scale)
 
 
-def _kernel_quant(bt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
-                  m_ref, l_ref, acc_ref, *, page_size, scale, per_page):
-    """Int8-KV variant: the page DMA brings the quantized payload plus its
-    scales into VMEM and the dequantization happens here, inside the online-
-    softmax page loop — no fp KV is ever materialized."""
-    b = pl.program_id(0)
-    q = q_ref[0, 0].astype(jnp.float32)                  # (rep, D)
+def _dequant_page(k_ref, v_ref, ks_ref, vs_ref, *, per_page):
+    """In-VMEM rescale of one int8 page: the page DMA brought the quantized
+    payload plus its scales; returns fp32 (page_size, D) k, v — no fp KV is
+    ever materialized in HBM."""
     k = k_ref[0, :, 0].astype(jnp.float32)               # (page_size, D) int8
     v = v_ref[0, :, 0].astype(jnp.float32)
     if per_page:                                         # one scale per page
-        ks = ks_ref[0, 0].astype(jnp.float32)
-        vs = vs_ref[0, 0].astype(jnp.float32)
-        k = k * ks
-        v = v * vs
+        k = k * ks_ref[0, 0].astype(jnp.float32)
+        v = v * vs_ref[0, 0].astype(jnp.float32)
     else:                                                # one per token
-        ks = ks_ref[0, :, 0].astype(jnp.float32)         # (page_size,)
-        vs = vs_ref[0, :, 0].astype(jnp.float32)
-        k = k * ks[:, None]
-        v = v * vs[:, None]
+        k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+        v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
+    return k, v
+
+
+def _kernel_quant(bt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, page_size, scale, per_page):
+    """Int8-KV decode variant: dequantization happens inside the online-
+    softmax page loop (see ``_dequant_page``)."""
+    b = pl.program_id(0)
+    q = q_ref[0, 0].astype(jnp.float32)                  # (rep, D)
+    k, v = _dequant_page(k_ref, v_ref, ks_ref, vs_ref, per_page=per_page)
     _page_update(q, k, v, b, o_ref, m_ref, l_ref, acc_ref, len_ref,
                  page_size=page_size, scale=scale)
 
@@ -178,3 +211,156 @@ def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), *inputs)
     return out.reshape(b, h, d)
+
+
+# --------------------------------------------------------------------- prefill
+def _prefill_update(q, k, v, b, o_ref, m_ref, l_ref, acc_ref, st_ref, len_ref,
+                    *, page_size, rep, scale):
+    """One prefill page for one query chunk: q (chunk*rep, D) — ``rep`` query
+    heads per chunk row, row r is chunk position r // rep; k, v
+    (page_size, D) fp32 in VMEM.  The causal mask is computed from the
+    scalar-prefetched per-row absolute start offset ``st_ref[b]``; keys past
+    ``len_ref[b]`` (right-padded bucket positions, unwritten reserve pages)
+    are masked like the decode kernel masks pages past the length.  Pages
+    entirely above the chunk's causal horizon or past the row length are
+    skipped outright — roughly the upper triangle of the (chunk, page)
+    grid, where every logit would mask to -inf."""
+    p = pl.program_id(3)
+
+    @pl.when(p == 0)
+    def _():
+        _sm_reset(m_ref, l_ref, acc_ref)
+
+    # program ids / scalar prefetch reads stay outside the pl.when body
+    # (program_id does not lower inside the predicated branch on interpret)
+    chunk = q.shape[0] // rep
+    q0 = st_ref[b] + pl.program_id(2) * chunk       # tile's first qpos
+    kbase = p * page_size
+    length = len_ref[b]
+    live = (kbase <= q0 + chunk - 1) & (kbase < length)
+
+    @pl.when(live)
+    def _():
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        qpos = q0 + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, dimension=0) // rep
+        kpos = kbase + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, dimension=1)
+        s = jnp.where((kpos <= qpos) & (kpos < length), s, -jnp.inf)
+        _sm_update(s, v, m_ref, l_ref, acc_ref)
+
+    @pl.when(p == pl.num_programs(3) - 1)
+    def _():
+        _sm_flush(o_ref, m_ref, l_ref, acc_ref)
+
+
+def _prefill_kernel(bt_ref, st_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                    m_ref, l_ref, acc_ref, *, page_size, rep, scale):
+    b = pl.program_id(0)
+    q = q_ref[0, 0, 0].astype(jnp.float32)               # (chunk*rep, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (page_size, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    _prefill_update(q, k, v, b, o_ref, m_ref, l_ref, acc_ref, st_ref, len_ref,
+                    page_size=page_size, rep=rep, scale=scale)
+
+
+def _prefill_kernel_quant(bt_ref, st_ref, len_ref, q_ref, k_ref, v_ref,
+                          ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                          page_size, rep, scale, per_page):
+    """Int8-KV prefill variant: page payload + scales arrive in one DMA and
+    the rescale happens inside the online-softmax page loop."""
+    b = pl.program_id(0)
+    q = q_ref[0, 0, 0].astype(jnp.float32)               # (chunk*rep, D)
+    k, v = _dequant_page(k_ref, v_ref, ks_ref, vs_ref, per_page=per_page)
+    _prefill_update(q, k, v, b, o_ref, m_ref, l_ref, acc_ref, st_ref, len_ref,
+                    page_size=page_size, rep=rep, scale=scale)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "q_chunk", "interpret"))
+def paged_prefill(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                  block_tables: jnp.ndarray, seq_start: jnp.ndarray,
+                  lengths: jnp.ndarray, *,
+                  k_scales: jnp.ndarray | None = None,
+                  v_scales: jnp.ndarray | None = None,
+                  scale: float | None = None, q_chunk: int = 128,
+                  interpret: bool = True) -> jnp.ndarray:
+    """Chunked prefill attention over a paged KV pool (ISSUE 5 tentpole).
+
+    q            : (B, S, H, D) — the suffix query block; query i of row b
+                   sits at absolute position ``seq_start[b] + i`` (its KV
+                   must already be written to the pool).
+    k_pages/v_pages: (P, page_size, Hkv, D) physical page pools (int8 when
+                   ``k_scales``/``v_scales`` are given).
+    block_tables : (B, max_pages) int32 — padding entries must point at a
+                   valid (e.g. null) page.
+    seq_start    : (B,) int32 — prefix-hit length (0 on a cold prefill).
+    lengths      : (B,) int32 — total valid keys per row (prefix + real
+                   suffix tokens, i.e. ``seq_start + write_lens``); keys at
+                   or past this are masked, so right-padded bucket positions
+                   never leak into real rows' outputs.
+    ``q_chunk`` bounds the query rows per grid step (the VMEM tile is
+    (q_chunk·rep, D)); S is padded up to a chunk multiple internally and the
+    pad rows' outputs are sliced off.  Returns (B, S, H, D).
+    """
+    b, s, h, d = q.shape
+    _, page_size, hkv, _ = k_pages.shape
+    assert h % hkv == 0, (h, hkv)
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("pass both k_scales and v_scales, or neither")
+    rep = h // hkv
+    max_pages = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    chunk = max(1, min(q_chunk, s))
+    nq = -(-s // chunk)
+    pad = nq * chunk - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # (B, S, H, D) -> (B, Hkv, nq, chunk*rep, D): one grid step's query tile
+    # is a kv head's rep query heads over one chunk of positions
+    qg = q.reshape(b, nq, chunk, hkv, rep, d).transpose(0, 3, 1, 2, 4, 5)
+    qg = qg.reshape(b, hkv, nq, chunk * rep, d)
+    in_specs = [
+        pl.BlockSpec((1, 1, 1, chunk * rep, d),
+                     lambda b, h, qc, p, bt, st, ln: (b, h, qc, 0, 0)),
+        pl.BlockSpec((1, page_size, 1, d),
+                     lambda b, h, qc, p, bt, st, ln: (bt[b, p], 0, h, 0)),
+        pl.BlockSpec((1, page_size, 1, d),
+                     lambda b, h, qc, p, bt, st, ln: (bt[b, p], 0, h, 0)),
+    ]
+    inputs = [qg, k_pages, v_pages]
+    if k_scales is None:
+        kernel = functools.partial(_prefill_kernel, page_size=page_size,
+                                   rep=rep, scale=scale)
+    else:
+        per_page = k_scales.ndim == 2          # (P, Hkv) vs (P, ps, Hkv)
+        if per_page:
+            scale_spec = pl.BlockSpec(
+                (1, 1), lambda b, h, qc, p, bt, st, ln: (bt[b, p], h))
+        else:
+            scale_spec = pl.BlockSpec(
+                (1, page_size, 1),
+                lambda b, h, qc, p, bt, st, ln: (bt[b, p], 0, h))
+        in_specs += [scale_spec, scale_spec]
+        inputs += [k_scales, v_scales]
+        kernel = functools.partial(_prefill_kernel_quant, page_size=page_size,
+                                   rep=rep, scale=scale, per_page=per_page)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hkv, nq, max_pages),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, 1, chunk * rep, d),
+                               lambda b, h, qc, p, bt, st, ln: (b, h, qc, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((chunk * rep,), jnp.float32),
+                        pltpu.VMEM((chunk * rep,), jnp.float32),
+                        pltpu.VMEM((chunk * rep, d), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, nq, chunk * rep, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), seq_start.astype(jnp.int32),
+      lengths.astype(jnp.int32), *inputs)
+    out = out.reshape(b, hkv, nq, chunk, rep, d).transpose(0, 2, 3, 1, 4, 5)
+    return out.reshape(b, nq * chunk, h, d)[:, :s]

@@ -120,6 +120,49 @@ def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     return out.reshape(b, h, d).astype(q.dtype)
 
 
+def paged_prefill_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                      v_pages: jnp.ndarray, block_tables: jnp.ndarray,
+                      seq_start: jnp.ndarray, lengths: jnp.ndarray, *,
+                      k_scales: jnp.ndarray | None = None,
+                      v_scales: jnp.ndarray | None = None,
+                      scale: float | None = None) -> jnp.ndarray:
+    """Oracle for ``kernels/paged_attention.py::paged_prefill``: gather every
+    sequence's pages into a contiguous (B, max_pages*page_size, Hkv, D) view
+    (densely dequantized when int8 — exactly the materialization the kernel
+    exists to avoid), then run causally masked grouped attention over the
+    whole suffix block.
+
+    q: (B, S, H, D) — query i of row b sits at absolute position
+    ``seq_start[b] + i``; ``lengths``: (B,) total valid keys per row
+    (``seq_start + write_lens``), masking right-padded bucket positions and
+    unwritten reserve pages.  Fully-masked query rows yield exact zeros,
+    matching the kernel's zero-normalizer convention.  -> (B, S, H, D).
+    """
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("pass both k_scales and v_scales, or neither")
+    if k_scales is not None:
+        k_pages = kv_quant.dequantize(k_pages, k_scales, dtype=jnp.float32)
+        v_pages = kv_quant.dequantize(v_pages, v_scales, dtype=jnp.float32)
+    b, s, h, d = q.shape
+    _, ps, hkv, _ = k_pages.shape
+    rep = h // hkv
+    k = k_pages[block_tables].reshape(b, -1, hkv, d)    # (B, maxp*ps, Hkv, D)
+    v = v_pages[block_tables].reshape(b, -1, hkv, d)
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qg = q.reshape(b, s, hkv, rep, d)
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = seq_start[:, None] + jnp.arange(s)[None, :]           # (B, S)
+    kpos = jnp.arange(k.shape[1])                                # (K,)
+    mask = ((kpos[None, None, :] <= qpos[:, :, None])
+            & (kpos[None, None, :] < lengths[:, None, None]))    # (B, S, K)
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = p * mask[:, None, None]
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
 def selective_scan_ref(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
                        b: jnp.ndarray, c: jnp.ndarray, d: jnp.ndarray,
                        h0: jnp.ndarray | None = None):

@@ -11,7 +11,8 @@ Cache layouts (DESIGN.md §2/§10):
   full attention : slot — k/v (B, max_len, Hkv, D), write at seq_lens via
                    scatter; or paged — k/v pools (pages, page_size, Hkv, D)
                    addressed through a per-sequence device block table
-                   (decode runs kernels/paged_attention.py)
+                   (decode AND prefill run kernels/paged_attention.py —
+                   no gathered KV copy exists anywhere on the paged path)
   sliding window : ring buffers (B, window + num_sink, Hkv, D); the first
                    num_sink slots pin attention sinks (hymba meta tokens)
   MLA            : compressed (B, max_len, kv_lora + rope_dim)
@@ -34,6 +35,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels import paged_attention as PA
+from repro.kernels import ref as KR
 from repro.models import layers as L
 from repro.serving import kv_quant as KQ
 
@@ -188,21 +190,27 @@ def gqa_apply(p, x, *, cfg: ModelConfig, kernels=L.DEFAULT_KERNELS,
                      window=window, num_sink=num_sink, chunk=chunk)
         new_cache = None
     elif "k_pages" in cache:
-        # Paged layout (DESIGN.md §10): K/V pages of a shared physical pool
-        # addressed through the per-sequence device block table.  Decode runs
-        # the Pallas paged-attention kernel; prefill gathers the table into a
-        # contiguous view for chunked attend.  Right-padded (bucketed)
-        # prefill passes ``write_lens`` — padded positions' writes are routed
-        # to the null page so they never corrupt real pages.
+        # Paged layout (DESIGN.md §10/§13): K/V pages of a shared physical
+        # pool addressed through the per-sequence device block table.  Decode
+        # runs the Pallas paged-attention kernel; prefill runs the chunked
+        # paged-prefill kernel directly over the pool — no path here ever
+        # materializes a gathered KV copy (``kernels.paged_*_impl = "ref"``
+        # routes to the jnp oracles in ``kernels/ref.py``, which do gather —
+        # debugging only).  Right-padded (bucketed) prefill passes
+        # ``write_lens`` — padded positions' writes are routed to the null
+        # page so they never corrupt real pages; positions past the block
+        # table (an overrunning sequence) are null-routed too instead of
+        # aliasing into the last table column's live page.
         assert block_tables is not None, "paged cache requires block_tables"
         assert window == 0 and num_sink == 0, "paged layout is full-attn only"
         kp, vp = cache["k_pages"], cache["v_pages"]
         ksc, vsc = cache.get("k_scales"), cache.get("v_scales")
         ps = kp.shape[1]
-        maxp = block_tables.shape[1]
         tpos = seq_lens[:, None] + jnp.arange(s)[None, :]          # (B, S) abs
-        pages = jnp.take_along_axis(block_tables,
-                                    jnp.minimum(tpos // ps, maxp - 1), axis=1)
+        # out-of-range logical pages (an overrunning sequence) fill with the
+        # null page instead of aliasing into the last table column
+        pages = jnp.take_along_axis(block_tables, tpos // ps, axis=1,
+                                    mode="fill", fill_value=0)
         if write_lens is not None:                                 # (B,) real
             pages = jnp.where(jnp.arange(s)[None, :] < write_lens[:, None],
                               pages, 0)                            # null page
@@ -220,20 +228,23 @@ def gqa_apply(p, x, *, cfg: ModelConfig, kernels=L.DEFAULT_KERNELS,
         else:
             kp = kp.at[pages, offs].set(k.astype(kp.dtype))
             vp = vp.at[pages, offs].set(v.astype(vp.dtype))
-        if s == 1 and kernels.paged_attention_impl == "kernel":
-            out = PA.paged_attention(q[:, 0], kp, vp, block_tables,
-                                     seq_lens + 1, k_scales=ksc,
-                                     v_scales=vsc)[:, None]
+        if s == 1:
+            fn = (PA.paged_attention
+                  if kernels.paged_attention_impl == "kernel"
+                  else KR.paged_attention_ref)
+            out = fn(q[:, 0], kp, vp, block_tables, seq_lens + 1,
+                     k_scales=ksc, v_scales=vsc)[:, None]
         else:
-            hkv = k.shape[2]
-            k_all, v_all = kp[block_tables], vp[block_tables]
-            if ksc is not None:       # gather scales with their pages
-                k_all = KQ.dequantize(k_all, ksc[block_tables], dtype=k.dtype)
-                v_all = KQ.dequantize(v_all, vsc[block_tables], dtype=v.dtype)
-            k_all = k_all.reshape(b, -1, hkv, hd).astype(k.dtype)
-            v_all = v_all.reshape(b, -1, hkv, hd).astype(v.dtype)
-            out = attend(q, k_all, v_all, qpos=tpos, causal=True, chunk=chunk,
-                         grouped=s <= 8)
+            wl = (write_lens if write_lens is not None
+                  else jnp.full((b,), s, jnp.int32))
+            if kernels.paged_prefill_impl == "kernel":
+                out = PA.paged_prefill(q, kp, vp, block_tables, seq_lens,
+                                       seq_lens + wl, k_scales=ksc,
+                                       v_scales=vsc, q_chunk=min(chunk, 128))
+            else:
+                out = KR.paged_prefill_ref(q, kp, vp, block_tables, seq_lens,
+                                           seq_lens + wl, k_scales=ksc,
+                                           v_scales=vsc)
         new_cache = {"k_pages": kp, "v_pages": vp}
         if ksc is not None:
             new_cache.update(k_scales=ksc, v_scales=vsc)
@@ -268,17 +279,26 @@ def gqa_apply(p, x, *, cfg: ModelConfig, kernels=L.DEFAULT_KERNELS,
             kc = kc.at[bidx, slot].set(k.astype(kc.dtype))
             vc = vc.at[bidx, slot].set(v.astype(vc.dtype))
         else:
-            slot = jnp.minimum(tpos, cap - 1)
+            # bucketed prefill: right-padded positions (>= write_lens) are
+            # pointed past the cache and *dropped* — the old
+            # ``minimum(tpos, cap - 1)`` clamp scattered pad garbage into
+            # cell cap-1 whenever the bucket overhung the capacity.  Any
+            # genuine position overrun drops the same way instead of
+            # corrupting the last live cell.
+            slot = tpos
+            if write_lens is not None:
+                slot = jnp.where(jnp.arange(s)[None, :] < write_lens[:, None],
+                                 slot, cap)
             if ksl is not None:       # quantize-on-write, per-token scales
                 kq, kss = KQ.quantize(k, scale_dtype=ksl.dtype)
                 vq, vss = KQ.quantize(v, scale_dtype=vsl.dtype)
-                kc = kc.at[bidx, slot].set(kq)
-                vc = vc.at[bidx, slot].set(vq)
-                ksl = ksl.at[bidx, slot].set(kss)
-                vsl = vsl.at[bidx, slot].set(vss)
+                kc = kc.at[bidx, slot].set(kq, mode="drop")
+                vc = vc.at[bidx, slot].set(vq, mode="drop")
+                ksl = ksl.at[bidx, slot].set(kss, mode="drop")
+                vsl = vsl.at[bidx, slot].set(vss, mode="drop")
             else:
-                kc = kc.at[bidx, slot].set(k.astype(kc.dtype))
-                vc = vc.at[bidx, slot].set(v.astype(vc.dtype))
+                kc = kc.at[bidx, slot].set(k.astype(kc.dtype), mode="drop")
+                vc = vc.at[bidx, slot].set(v.astype(vc.dtype), mode="drop")
             out = attend(q, kc, vc, qpos=tpos, causal=True, window=window,
                          num_sink=num_sink, chunk=chunk, grouped=s <= 8,
                          k_scale=ksl, v_scale=vsl)

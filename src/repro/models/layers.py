@@ -152,14 +152,18 @@ class KernelConfig:
     defaults, or ``"auto"`` to consult the per-shape autotuner cache
     (``kernels/autotune.py`` — tuned once per (M, K, N, group, strategy) key,
     persisted to JSON).  ``cache_layout`` selects the serving cache layout
-    (``Engine(cache=...)`` defaults to it); ``paged_attention_impl`` picks the
-    paged decode hot path — ``"kernel"`` (the Pallas kernel, interpret-mode
-    on CPU) or ``"ref"`` (jnp gather + grouped attention, for debugging)."""
+    (``Engine(cache=...)`` defaults to it); ``paged_attention_impl`` /
+    ``paged_prefill_impl`` pick the paged decode / prefill hot paths —
+    ``"kernel"`` (the Pallas kernels, interpret-mode on CPU) or ``"ref"``
+    (the jnp gather oracles in ``kernels/ref.py``, which materialize a
+    contiguous KV copy — debugging and the bench's gather-vs-kernel
+    comparison only)."""
     strategy: KernelStrategy = OPT4GPTQ
     use_pallas: bool = False          # False: jnp ref path (CPU / dry-run)
     block_sizes: tuple[int, int, int] | str | None = None
     cache_layout: str = CacheLayout.SLOT
     paged_attention_impl: str = "kernel"
+    paged_prefill_impl: str = "kernel"
 
 
 DEFAULT_KERNELS = KernelConfig()

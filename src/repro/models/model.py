@@ -211,9 +211,10 @@ class LM:
                                      cache=cache, seq_lens=seq_lens,
                                      mode="prefill")
             seq_lens = seq_lens + cfg.meta_tokens
-        # paged + bucketed prompts: route padded positions' page writes to
-        # the null page (real writes cover true_lengths tokens of the block)
-        write_lens = true_lengths if block_tables is not None else None
+        # bucketed prompts: padded positions' cache writes are masked on
+        # every layout — routed to the null page (paged) or dropped (slot);
+        # real writes cover true_lengths tokens of the block
+        write_lens = true_lengths
         logits, cache, _ = self.apply(
             params, batch, kernels=kernels, cache=cache, seq_lens=seq_lens,
             mode="prefill", block_tables=block_tables, write_lens=write_lens)

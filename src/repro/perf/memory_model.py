@@ -17,6 +17,9 @@ Serving-side KV accounting (ISSUE 4 satellite): ``slot_cache_bytes`` /
 dtype × quant mode (scale pools included), and ``kv_cache_report`` tabulates
 the whole layout × dtype × quant grid — the numbers behind the int8-KV
 capacity claim (2x vs bf16, 4x vs fp32 tokens per byte).
+``paged_prefill_peak_bytes`` (ISSUE 5) quantifies the transient the chunked
+paged-prefill kernel removes: the gather path's contiguous per-layer KV copy
+(plus its dense dequant when int8) vs the kernel's zero materialization.
 """
 from __future__ import annotations
 
@@ -145,6 +148,32 @@ def paged_cache_bytes(cfg: ModelConfig, num_pages: int, page_size: int, *,
     return KQ.page_bytes(cfg.num_layers, cfg.num_kv_heads, cfg.head_dim,
                          page_size, dtype=dtype,
                          kv_quant=kv_quant) * (num_pages + 1)
+
+
+def paged_prefill_peak_bytes(cfg: ModelConfig, *, batch: int, max_pages: int,
+                             page_size: int, dtype=jnp.float32, kv_quant=None,
+                             impl: str = "gather") -> int:
+    """Extra HBM one paged prefill attention call materializes *beyond the
+    page pool itself* (ISSUE 5).
+
+    The gather path (``paged_prefill_impl="ref"`` — the pre-kernel prefill)
+    builds a contiguous (B, max_pages·page_size, Hkv, D) copy of both K and
+    V per layer call; when the pool is int8 it additionally densely
+    dequantizes that copy to fp32, so peak prefill bytes are the int8
+    gather *plus* the fp32 copy.  The fused kernel streams one page at a
+    time through VMEM and materializes nothing in HBM — 0 extra bytes,
+    which is the whole point of the chunked paged-prefill kernel.
+    """
+    if impl == "kernel":
+        return 0
+    if impl != "gather":
+        raise ValueError(f"impl must be 'gather' or 'kernel', got {impl!r}")
+    elems = batch * max_pages * page_size * cfg.num_kv_heads * cfg.head_dim
+    if kv_quant is not None and getattr(kv_quant, "quantized", False):
+        per_pool = elems * (1 + 4)       # int8 gather + dense fp32 dequant
+    else:
+        per_pool = elems * jnp.dtype(dtype).itemsize
+    return 2 * per_pool                  # K and V
 
 
 def kv_cache_report(cfg: ModelConfig, *, batch_slots: int, max_len: int,

@@ -32,10 +32,12 @@ Two cache layouts, selected by ``EngineConfig.cache`` (default: the
   (``serving/kv_cache.py::PagedCache``), page-budget admission that reserves
   the full prompt+decode footprint up front (generation can never hit pool
   exhaustion mid-flight), a hashed-prefix cache (prefix-hit requests prefill
-  only their suffix against the reused pages), and the Pallas
-  paged-attention kernel on the decode hot path.  Prefill is bucketed like
-  the slot path — padded positions' page writes are routed to the null page
-  (``write_lens``), so recompiles stay bounded by the bucket set.
+  only their suffix against the reused pages), and the Pallas paged
+  kernels on *both* hot paths — decode and the chunked paged-prefill
+  kernel, so no gathered KV copy is ever materialized.  Prefill is
+  bucketed like the slot path — padded positions' page writes are routed
+  to the null page (``write_lens``), so recompiles stay bounded by the
+  bucket set.
 
 The decode hot loop is sync-free in both layouts: per-request sampling
 parameters are lowered to per-row device arrays (greedy flag, temperature,
@@ -432,6 +434,17 @@ class Engine:
             row = pc.row_of(req.rid)
             a = self.sched.activate(req, row)
             hit_pages = pc.prefix_hits.get(req.rid, 0)
+            if hit_pages * pc.page_size >= len(req.tokens):
+                # Full-prefix hit (ISSUE 5): a zero-token suffix would make
+                # ``_sample_first`` read logits of a pure-padding prefill.
+                # Back off so at least the last prompt token is recomputed;
+                # the backed-off pages are swapped private first so a
+                # donor's live pages are never rewritten.  Unreachable via
+                # ``alloc_seq``'s own hit cap — this guards any future
+                # admission path that shares more aggressively.
+                hit_pages = (len(req.tokens) - 1) // pc.page_size
+                pc.release_prefix(req.rid, hit_pages)
+                pc.prefix_hits[req.rid] = hit_pages
             hit_tokens = hit_pages * pc.page_size
             suffix = req.tokens[hit_tokens:]
             # bucketed suffix prefill against the reused prefix pages

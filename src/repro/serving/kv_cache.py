@@ -194,8 +194,7 @@ class PagedCache:
             shared = min(len(src), n_tokens // self.page_size)
             pages = src[:shared]
         elif tokens is not None:
-            # at least one suffix token must remain to prefill logits from
-            keys = self._prefix_keys(tokens)[:(n_tokens - 1) // self.page_size]
+            keys = self._prefix_keys(tokens)[:self._max_shared_pages(n_tokens)]
             for key in keys:
                 page = self._prefix_index.get(key)
                 if page is None or self.refcount[page] <= 0:
@@ -220,6 +219,45 @@ class PagedCache:
             self.prefix_hits[seq_id] = shared
         self._sync_row(seq_id)
         return True
+
+    def _max_shared_pages(self, n_tokens: int) -> int:
+        """Prefix-cache hits are capped below full-prompt coverage: at least
+        one suffix token must remain, or prefill would run over zero real
+        tokens and the first sampled token would come from padding logits
+        (ISSUE 5).  ``Engine._admit_paged`` guards the same invariant with a
+        page backoff in case a future admission path bypasses this cap."""
+        return (n_tokens - 1) // self.page_size
+
+    def release_prefix(self, seq_id: int, keep: int) -> int:
+        """Drop prefix sharing beyond the first ``keep`` pages of ``seq_id``:
+        every later page of its table that is still shared (refcount > 1) is
+        swapped for a fresh private page, so the caller can re-prefill the
+        dropped span without scribbling on a donor's live page.  The old
+        payload is never copied (unlike COW) — the caller rewrites the whole
+        dropped span — which is what makes this safe with
+        ``alloc_pools=False``, where the payloads live in the engine's model
+        cache tree.  Returns the number of pages swapped; raises when the
+        free list cannot supply a replacement."""
+        table = self.tables[seq_id]
+        swapped = 0
+        try:
+            for li in range(keep, len(table)):
+                p = table[li]
+                if self.refcount[p] <= 1:
+                    continue               # already private: rewriting is safe
+                if not self.free_list:
+                    raise RuntimeError(
+                        "page pool exhausted while privatizing prefix pages "
+                        f"of seq {seq_id} (backoff from page {keep})")
+                q = self.free_list.pop()
+                self.refcount[p] -= 1
+                self.refcount[q] += 1
+                table[li] = q
+                swapped += 1
+        finally:
+            if swapped:
+                self._sync_row(seq_id)
+        return swapped
 
     def extend_seq(self, seq_id: int, n_new: int = 1) -> bool:
         old = self.lengths[seq_id]

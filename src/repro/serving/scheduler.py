@@ -40,6 +40,12 @@ PREFILL_BUCKETS = (32, 64, 128, 256, 512, 1024, 2048, 4096)
 
 
 def bucket_len(n: int) -> int:
+    """Smallest prefill bucket holding ``n`` tokens; multiples of 4096 past
+    the bucket table.  ``n <= 0`` is 0 — there is nothing to prefill, and the
+    old behaviour (pad 0 up to 32) silently prefilled a block of pure padding
+    (ISSUE 5)."""
+    if n <= 0:
+        return 0
     for b in PREFILL_BUCKETS:
         if n <= b:
             return b
