@@ -31,12 +31,25 @@ from repro.data.pipeline import sharegpt_stream
 from repro.models import build_model
 from repro.models import layers as L
 from repro.perf import memory_model as MM
-from repro.serving.api import EngineConfig
+from repro.serving.api import EngineConfig, FinishReason, QueueFullError
+from repro.serving.clock import ManualClock
 from repro.serving.engine import Engine
 from repro.serving.kv_quant import KVQuantConfig, page_bytes
 
 N_REQUESTS = 8
 MAX_NEW = 6
+# overload experiment (ISSUE 6): open-loop Poisson arrivals with a burst,
+# driven on a ManualClock (STEP_DT simulated seconds per engine step) so the
+# queueing/preemption dynamics — not CPU interpret speed — set the latencies
+OVL_REQUESTS = 12
+OVL_PROMPT_LEN = 20
+OVL_MAX_NEW = 6
+OVL_STEP_DT = 1.0          # simulated seconds consumed by one engine step
+OVL_MEAN_IARRIVAL = 1.0    # Poisson mean inter-arrival (simulated s)
+OVL_BURST = (4, 8)         # request index range arriving at 4x rate
+OVL_NUM_PAGES = 4          # page pool sized for ~2 concurrent sequences
+OVL_MAX_QUEUED = 6
+OVL_QUEUE_TIMEOUT_S = 8.0
 # capacity experiment: fixed-length prompts so every request needs the same
 # page count, and a budget of 4 bf16 pages — int8 (payload/2 + scales) buys
 # ~7 pages from the identical byte budget
@@ -80,6 +93,62 @@ def _cache_bytes(cfg, eng, conf) -> int:
                                     kv_quant=eng.kv_quant)
     return MM.slot_cache_bytes(cfg, conf.batch_slots, conf.max_len,
                                dtype=eng.cache_dtype, kv_quant=eng.kv_quant)
+
+
+def _overload_run(cfg, model, params, kern, *, preemption: bool) -> dict:
+    """Open-loop overload: requests arrive on a Poisson process (with a 4x
+    burst window) in *simulated* time — the engine clock advances OVL_STEP_DT
+    per step regardless of interpret-mode wall time, so TTFT percentiles
+    measure queueing + preemption policy, reproducibly."""
+    rng = np.random.default_rng(11)
+    gaps = rng.exponential(OVL_MEAN_IARRIVAL, size=OVL_REQUESTS)
+    gaps[OVL_BURST[0]:OVL_BURST[1]] /= 4.0          # burst window
+    arrivals = np.cumsum(gaps)
+    prompts = [rng.integers(2, cfg.vocab_size, size=OVL_PROMPT_LEN).tolist()
+               for _ in range(OVL_REQUESTS)]
+    prios = [1 if i % 4 == 3 else 0 for i in range(OVL_REQUESTS)]
+
+    clk = ManualClock(0.0)
+    conf = EngineConfig(batch_slots=4, max_len=128, kernels=kern, eos_id=-1,
+                        cache="paged", page_size=16,
+                        num_pages=OVL_NUM_PAGES, clock=clk,
+                        max_queued=OVL_MAX_QUEUED,
+                        default_queue_timeout_s=OVL_QUEUE_TIMEOUT_S,
+                        preemption=preemption)
+    eng = Engine(model, params, conf)
+    outs, prio_of, nxt, steps = [], {}, 0, 0
+    while (nxt < OVL_REQUESTS or not eng.sched.idle) and steps < 500:
+        while nxt < OVL_REQUESTS and arrivals[nxt] <= clk.now():
+            try:
+                rid = eng.submit(prompts[nxt], max_new_tokens=OVL_MAX_NEW,
+                                 ignore_eos=True, priority=prios[nxt])
+                prio_of[rid] = prios[nxt]
+            except QueueFullError:
+                pass                      # counted in stats.rejected_submits
+            nxt += 1
+        outs.extend(eng.step())
+        eng._events.clear()
+        clk.advance(OVL_STEP_DT)
+        steps += 1
+    served = [o for o in outs if o.finish_reason is not FinishReason.SHED]
+    hi = [o for o in served if prio_of.get(o.rid) == 1] or served
+    s = eng.stats
+    return {
+        "section": "overload", "layout": "paged",
+        "preemption": preemption, "requests": OVL_REQUESTS,
+        "mean_interarrival_s": OVL_MEAN_IARRIVAL, "step_dt_s": OVL_STEP_DT,
+        "steps": steps,
+        "finished": len(served), "shed": s.shed_requests,
+        "rejected_submits": s.rejected_submits,
+        "deferred_admissions": s.deferred_admissions,
+        "preemptions": s.preemptions,
+        "offloaded_pages": s.offloaded_pages,
+        "offloaded_bytes": s.offloaded_bytes,
+        "restored_pages": s.restored_pages,
+        "ttft_s": _pct([o.ttft for o in served]),
+        "ttft_hi_s": _pct([o.ttft for o in hi]),
+        "latency_s": _pct([o.latency for o in served]),
+    }
 
 
 def run():
@@ -179,6 +248,24 @@ def run():
             f"peak_active={rec['peak_active']}|"
             f"ttft_p50_s={rec['ttft_s']['p50']:.3f}|"
             f"tpot_p50_s={rec['tpot_s']['p50']:.3f}")
+
+    # ---- overload: open-loop Poisson+burst arrivals, preemption on/off ----
+    # every 4th request is high priority; with preemption enabled it evicts
+    # a low-priority victim (offload to host) instead of queueing behind it,
+    # which is exactly the p99-TTFT-for-priority-traffic trade the paper's
+    # serving stack makes under saturation
+    for preemption in (False, True):
+        rec = _overload_run(cfg, model, qparams, kern, preemption=preemption)
+        records.append(rec)
+        tag = "preempt" if preemption else "fifo"
+        lines.append(
+            f"serving/overload_{tag},{rec['steps']},"
+            f"ttft_p99_s={rec['ttft_s']['p99']:.1f}|"
+            f"hi_ttft_p99_s={rec['ttft_hi_s']['p99']:.1f}|"
+            f"finished={rec['finished']}|shed={rec['shed']}|"
+            f"rejected={rec['rejected_submits']}|"
+            f"preemptions={rec['preemptions']}|"
+            f"restored_pages={rec['restored_pages']}")
 
     try:
         with open(JSON_PATH, "w") as f:

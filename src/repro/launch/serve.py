@@ -36,7 +36,8 @@ def build_engine(args):
     eng = Engine(model, qparams, EngineConfig(
         batch_slots=args.slots, max_len=args.max_len, kernels=kern,
         eos_id=-1, cache=args.cache, page_size=args.page_size,
-        kv_quant=args.kv_quant))
+        kv_quant=args.kv_quant, max_queued=args.max_queued,
+        default_queue_timeout_s=args.queue_timeout))
     return cfg, eng
 
 
@@ -66,7 +67,8 @@ def run_http(args, cfg, eng):
     from repro.serving.http_api import make_server
 
     server = make_server(eng, host=args.host, port=args.port,
-                         model_name=cfg.name)
+                         model_name=cfg.name,
+                         stall_timeout_s=args.stall_timeout)
     print(f"[serve] {cfg.name} [{args.cache}] listening on "
           f"http://{args.host}:{server.port}/v1/completions "
           f"(SSE with \"stream\": true; prompts are token-id lists)",
@@ -100,6 +102,15 @@ def main(argv=None):
     ap.add_argument("--serve", action="store_true",
                     help="run the OpenAI-style /v1/completions HTTP "
                          "front-end instead of the offline request stream")
+    ap.add_argument("--max-queued", type=int, default=None,
+                    help="bounded admission: reject submits past this many "
+                         "queued requests with HTTP 429 (DESIGN.md §14)")
+    ap.add_argument("--queue-timeout", type=float, default=None,
+                    help="shed requests not admitted within this many "
+                         "seconds (HTTP 503, DESIGN.md §14)")
+    ap.add_argument("--stall-timeout", type=float, default=None,
+                    help="arm the engine-worker watchdog: fail in-flight "
+                         "requests if a step stalls past this (§14)")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8000,
                     help="HTTP port for --serve (0 = ephemeral)")

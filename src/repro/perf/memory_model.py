@@ -150,6 +150,16 @@ def paged_cache_bytes(cfg: ModelConfig, num_pages: int, page_size: int, *,
                          kv_quant=kv_quant) * (num_pages + 1)
 
 
+def host_offload_bytes(cfg: ModelConfig, n_pages: int, page_size: int, *,
+                       dtype=jnp.float32, kv_quant=None) -> int:
+    """Host bytes one preempted sequence's checkpoint holds: its private
+    pages (payload + scale pools), DESIGN.md §14.  Shared prefix pages are
+    released on device, never copied, so they cost nothing here — pass the
+    private page count."""
+    return KQ.page_bytes(cfg.num_layers, cfg.num_kv_heads, cfg.head_dim,
+                         page_size, dtype=dtype, kv_quant=kv_quant) * n_pages
+
+
 def paged_prefill_peak_bytes(cfg: ModelConfig, *, batch: int, max_pages: int,
                              page_size: int, dtype=jnp.float32, kv_quant=None,
                              impl: str = "gather") -> int:

@@ -27,19 +27,56 @@ class InjectedFailure(RuntimeError):
 
 @dataclasses.dataclass
 class Heartbeat:
+    """Wall-clock watchdog shared by the training loop and the serving
+    worker (DESIGN.md §14).
+
+    The worker thread calls ``beat()`` each iteration; a *separate* monitor
+    thread calls ``check()``.  Staleness must be detected from the monitor
+    side: the old design only bumped ``missed`` inside ``beat()``, so a
+    worker that stopped beating — the exact failure a watchdog exists for —
+    was never counted as missed.  ``check()`` charges one missed beat per
+    elapsed ``timeout_s`` window since the last beat, however the worker is
+    (mis)behaving.
+
+    ``clock`` is injectable (``serving/clock.py``) so stall tests advance
+    time manually instead of sleeping.
+    """
     timeout_s: float = 300.0
-    last_beat: float = dataclasses.field(default_factory=time.time)
+    clock: Callable[[], float] = time.time
+    last_beat: float | None = None
     missed: int = 0
+    # how much of the current staleness check() has already charged
+    _charged: int = dataclasses.field(default=0, repr=False)
+
+    def __post_init__(self):
+        if self.last_beat is None:
+            self.last_beat = self.clock()
 
     def beat(self):
-        now = time.time()
-        if now - self.last_beat > self.timeout_s:
+        now = self.clock()
+        if now - self.last_beat > self.timeout_s and not self._charged:
+            # late beat that no monitor observed — still a missed window
             self.missed += 1
         self.last_beat = now
+        self._charged = 0
+
+    def check(self) -> bool:
+        """Monitor-side probe: charge newly-elapsed missed windows and
+        return whether the worker is currently healthy."""
+        windows = int((self.clock() - self.last_beat) // self.timeout_s)
+        if windows > self._charged:
+            self.missed += windows - self._charged
+            self._charged = windows
+        return windows == 0
+
+    @property
+    def stale_s(self) -> float:
+        """Seconds since the last beat, as seen by the monitor."""
+        return self.clock() - self.last_beat
 
     @property
     def healthy(self) -> bool:
-        return time.time() - self.last_beat <= self.timeout_s
+        return self.clock() - self.last_beat <= self.timeout_s
 
 
 def resilient_train_loop(train_step: Callable, init_state: Any, pipeline,

@@ -34,15 +34,35 @@ class RequestState(str, enum.Enum):
     QUEUED = "queued"        # submitted, waiting for slot/page admission
     PREFILL = "prefill"      # admitted; prompt KV being written
     RUNNING = "running"      # decoding, first token already produced
+    PREEMPTED = "preempted"  # evicted by a higher-priority request; its KV
+                             # pages are offloaded to host memory and it is
+                             # back in the queue awaiting restore
     FINISHED = "finished"    # completed via stop token / eos / length
     ABORTED = "aborted"      # cancelled via Engine.abort()
 
 
 class FinishReason(str, enum.Enum):
-    """Why a request stopped — values match the OpenAI completions API."""
+    """Why a request stopped — values match the OpenAI completions API
+    where one exists (stop/length); shed/stall are overload outcomes
+    (DESIGN.md §14)."""
     STOP = "stop"            # eos (unless ignore_eos) or a stop_token_id
     LENGTH = "length"        # hit max_new_tokens
     ABORT = "abort"          # Engine.abort() mid-flight or while queued
+    SHED = "shed"            # queue deadline expired before admission
+                             # (graceful overload shedding -> HTTP 503)
+    STALL = "stall"          # engine worker watchdog fired: a step exceeded
+                             # the stall timeout; in-flight requests fail
+                             # instead of hanging their clients
+
+
+class QueueFullError(RuntimeError):
+    """``Engine.submit`` under bounded admission: the wait queue is at
+    ``EngineConfig.max_queued``.  The HTTP front-end maps this to 429 with
+    a ``Retry-After`` header (``retry_after_s``)."""
+
+    def __init__(self, msg: str, retry_after_s: float = 1.0):
+        super().__init__(msg)
+        self.retry_after_s = retry_after_s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +90,24 @@ class EngineConfig:
     # pools) instead of the capacity-equivalent default — the lever that
     # turns int8 KV into a ~2x (vs bf16) / ~4x (vs fp32) deeper page pool
     page_pool_bytes: int | None = None
+    # ---- overload resilience (DESIGN.md §14) ----
+    # bounded admission: submit() raises QueueFullError once this many
+    # requests are waiting (None = unbounded, the pre-§14 behaviour)
+    max_queued: int | None = None
+    # default per-request queue deadline: a request not admitted within
+    # this many seconds of submit is shed (FinishReason.SHED); per-request
+    # ``queue_timeout_s`` on submit() overrides it
+    default_queue_timeout_s: float | None = None
+    # paged layout: allow a higher-priority request that cannot reserve
+    # pages to preempt a lower-priority victim (offload its pages to host
+    # memory and re-queue it) instead of deferring behind it
+    preemption: bool = True
+    # injectable clock (serving/clock.py) — every serving deadline and
+    # timestamp reads through it; None -> the real SystemClock
+    clock: object = None
+    # serving fault injector (serving/faults.py::FaultInjector) consulted
+    # at the top of every Engine.step(); None in production
+    faults: object = None
 
     def __post_init__(self):
         if self.batch_slots <= 0:
@@ -117,6 +155,15 @@ class EngineConfig:
             if self.num_pages is not None:
                 raise ValueError(
                     "pass either num_pages or page_pool_bytes, not both")
+        if self.max_queued is not None and self.max_queued <= 0:
+            raise ValueError(
+                f"max_queued must be > 0 (or None for unbounded), got "
+                f"{self.max_queued}")
+        if (self.default_queue_timeout_s is not None
+                and self.default_queue_timeout_s <= 0):
+            raise ValueError(
+                f"default_queue_timeout_s must be > 0, got "
+                f"{self.default_queue_timeout_s}")
 
 
 @dataclasses.dataclass

@@ -1,0 +1,46 @@
+"""Injectable wall-clock for the serving stack (DESIGN.md §14).
+
+Every deadline decision in serving — queue-timeout shedding, stall
+detection, Retry-After estimates — reads time through a ``Clock`` object
+instead of calling ``time.time()`` directly, so fault-injection tests can
+drive the clock deterministically (``ManualClock``) without real sleeps.
+``tests/test_lint.py`` gates the serving modules off direct ``time.time``
+calls; this module is the single permitted call site.
+
+Timestamps recorded for *metrics* (arrival, ttft, tpot) come from the same
+clock, so a test that advances a ``ManualClock`` sees consistent latencies.
+"""
+from __future__ import annotations
+
+import time
+
+
+class SystemClock:
+    """Real wall-clock. The one place serving code touches ``time.time``."""
+
+    def now(self) -> float:
+        return time.time()
+
+
+class ManualClock:
+    """Deterministic test clock: advances only when told to.
+
+    The fault-injection harness (``serving/faults.py``) uses this to
+    simulate step-time stalls — advance past a watchdog timeout without
+    sleeping — and queue-deadline expiry.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self._now = float(start)
+
+    def now(self) -> float:
+        return self._now
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"cannot rewind the clock (dt={dt})")
+        self._now += dt
+        return self._now
+
+
+SYSTEM_CLOCK = SystemClock()

@@ -17,10 +17,22 @@ The public surface is the request lifecycle API (``serving/api.py``):
   preserved); terminal events carry the ``RequestOutput``.
 * ``abort(rid)`` — cancels a queued or in-flight request, freeing its slot
   or paged reservation (including prefix-cache refcounts) immediately.
-* Requests move ``QUEUED → PREFILL → RUNNING → FINISHED | ABORTED``
-  (``RequestState``); ``launch/serve.py --serve`` exposes the whole thing as
-  an OpenAI-style ``/v1/completions`` HTTP endpoint with SSE streaming
+* Requests move ``QUEUED → PREFILL → RUNNING → FINISHED | ABORTED`` — plus
+  ``PREEMPTED`` and back under overload (``RequestState``);
+  ``launch/serve.py --serve`` exposes the whole thing as an OpenAI-style
+  ``/v1/completions`` HTTP endpoint with SSE streaming
   (``serving/http_api.py``).
+
+Overload resilience (DESIGN.md §14): requests carry a ``priority`` class —
+on the paged layout a higher class that cannot reserve pages preempts the
+lowest/most-recent victim (its private pages are checkpointed to host
+memory via ``PagedCache.offload`` and restored later, greedy
+token-identical); ``EngineConfig.max_queued`` bounds the wait queue
+(``QueueFullError`` → HTTP 429) and per-request queue deadlines shed
+unadmitted requests (``FinishReason.SHED`` → HTTP 503).  All deadline
+logic reads an injectable clock (``serving/clock.py``) and a
+``FaultInjector`` (``serving/faults.py``) can deterministically inject
+page exhaustion, stalls and aborts at chosen steps.
 
 Two cache layouts, selected by ``EngineConfig.cache`` (default: the
 ``KernelConfig.cache_layout`` enum):
@@ -49,7 +61,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 import warnings
 from typing import Iterator, Optional, Sequence
 
@@ -58,10 +69,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import LM
+from repro.serving import clock as CLK
 from repro.serving import kv_cache as KV
 from repro.serving import kv_quant as KQ
-from repro.serving.api import (EngineConfig, FinishReason, RequestOutput,
-                               RequestState, StreamEvent)
+from repro.serving.api import (EngineConfig, FinishReason, QueueFullError,
+                               RequestOutput, RequestState, StreamEvent)
 from repro.serving.sampler import SamplingParams, sample, sample_batched
 from repro.serving.scheduler import Active, Request, Scheduler, bucket_len
 
@@ -79,6 +91,14 @@ class EngineStats:
     # deepest concurrent batch ever admitted — the number int8 KV moves by
     # widening the page pool under a fixed byte budget (DESIGN.md §12)
     peak_active: int = 0
+    # ---- overload resilience (DESIGN.md §14) ----
+    preemptions: int = 0         # victims evicted for higher-priority admits
+    offloaded_pages: int = 0     # pages checkpointed to host memory
+    offloaded_bytes: int = 0     # host bytes those checkpoints held
+    restored_pages: int = 0      # checkpointed pages scattered back on-device
+    rejected_submits: int = 0    # submit() refused at max_queued (HTTP 429)
+    deferred_admissions: int = 0  # head-of-queue could not reserve this step
+    shed_requests: int = 0       # queued past their deadline (HTTP 503)
 
     @property
     def decode_throughput(self) -> float:
@@ -120,9 +140,15 @@ class Engine:
         self.sched = Scheduler()
         self.rng = jax.random.key(config.seed)
         self.stats = EngineStats()
+        self.clock = config.clock if config.clock is not None \
+            else CLK.SYSTEM_CLOCK
+        self.faults = config.faults
         self._next_rid = 0
         self._requests: dict[int, Request] = {}
         self._events: list[StreamEvent] = []
+        # rid -> RestoredSeq for restores committed by _reserve_paged but
+        # not yet resumed by _admit_paged (one admission pass apart)
+        self._pending_restores: dict[int, KV.RestoredSeq] = {}
         kvq = config.kv_quant            # normalized by EngineConfig
         if kvq is not None and not kvq.quantized:
             # fp passthrough is just another way to spell the cache dtype
@@ -274,7 +300,8 @@ class Engine:
     def submit(self, tokens: list[int], max_new_tokens: int = 32,
                sampling: SamplingParams = SamplingParams(greedy=True), *,
                stop_token_ids: Sequence[int] = (),
-               ignore_eos: bool = False) -> int:
+               ignore_eos: bool = False, priority: int = 0,
+               queue_timeout_s: Optional[float] = None) -> int:
         """Queue one request; returns its rid.
 
         Validates everything a bad request could break later — prompt+decode
@@ -283,6 +310,15 @@ class Engine:
         jitted decode step.  ``stop_token_ids`` stop generation like eos
         does; ``ignore_eos=True`` disables the eos stop (fixed-length
         benchmark decoding).
+
+        Overload behaviour (DESIGN.md §14): ``priority`` picks the admission
+        class (higher admitted first; on the paged layout a class may
+        preempt strictly lower ones under page pressure).  Raises
+        ``QueueFullError`` when ``EngineConfig.max_queued`` requests are
+        already waiting.  ``queue_timeout_s`` (default
+        ``EngineConfig.default_queue_timeout_s``) sheds the request with
+        ``FinishReason.SHED`` if it is still unadmitted that many seconds
+        after submit.
         """
         tokens = list(tokens)
         if not tokens:
@@ -290,7 +326,19 @@ class Engine:
         if max_new_tokens <= 0:
             raise ValueError(
                 f"max_new_tokens must be > 0, got {max_new_tokens}")
+        if queue_timeout_s is not None and queue_timeout_s <= 0:
+            raise ValueError(
+                f"queue_timeout_s must be > 0, got {queue_timeout_s}")
         sampling.validate(self.model.cfg.vocab_size)
+        mq = self.config.max_queued
+        if mq is not None and len(self.sched.waiting) >= mq:
+            self.stats.rejected_submits += 1
+            # crude Retry-After: one in-flight generation's worth of steps
+            per_step = (self.stats.wall_s / self.stats.steps
+                        if self.stats.steps else 0.1)
+            raise QueueFullError(
+                f"wait queue is full ({mq} requests queued); retry later",
+                retry_after_s=max(1.0, per_step * max_new_tokens))
         if self.layout == "paged":
             need = self.pc.pages_needed(len(tokens) + max_new_tokens)
             if need > min(self.pc.max_pages, self.pc.num_pages):
@@ -307,11 +355,16 @@ class Engine:
                 f"{self.max_len}")
         rid = self._next_rid
         self._next_rid += 1
+        now = self.clock.now()
+        timeout = (queue_timeout_s if queue_timeout_s is not None
+                   else self.config.default_queue_timeout_s)
         req = Request(rid=rid, tokens=tokens,
                       max_new_tokens=max_new_tokens, sampling=sampling,
-                      arrival=time.time(),
+                      arrival=now,
                       stop_token_ids=tuple(stop_token_ids),
-                      ignore_eos=ignore_eos)
+                      ignore_eos=ignore_eos, priority=priority,
+                      queue_deadline=(now + timeout
+                                      if timeout is not None else None))
         self._requests[rid] = req
         self.sched.submit(req)
         return rid
@@ -332,14 +385,17 @@ class Engine:
         so ``stream()`` consumers observe the abort.
         """
         req = self.sched.cancel(rid)
-        if req is not None:                    # still queued: nothing held
+        if req is not None:     # queued (or preempted): no device resources
+            if self.layout == "paged":
+                self.pc.drop_offloaded(rid)   # free any host checkpoint
             req.state = RequestState.ABORTED
             out = RequestOutput(
-                rid=rid, prompt_len=len(req.tokens), output=[],
-                arrival=req.arrival, t_first_token=0.0, t_done=time.time(),
-                finish_reason=FinishReason.ABORT)
+                rid=rid, prompt_len=len(req.tokens),
+                output=list(req.saved_output),
+                arrival=req.arrival, t_first_token=req.saved_t_first,
+                t_done=self.clock.now(), finish_reason=FinishReason.ABORT)
             self._events.append(StreamEvent(
-                rid=rid, token=None, index=0,
+                rid=rid, token=None, index=len(out.output),
                 finish_reason=FinishReason.ABORT, output=out))
             return out
         hit = self.sched.find_active(rid)
@@ -378,7 +434,25 @@ class Engine:
         self.rng, k = jax.random.split(self.rng)
         return int(sample(logits, k, req.sampling)[0])
 
+    def _shed_expired(self, finished: list[RequestOutput]):
+        """Graceful shedding (DESIGN.md §14): drop queued requests whose
+        queue deadline passed before admission.  They hold no resources;
+        clients observe ``FinishReason.SHED`` (HTTP 503 + Retry-After)."""
+        now = self.clock.now()
+        for req in self.sched.pop_expired(now):
+            req.state = RequestState.FINISHED
+            out = RequestOutput(
+                rid=req.rid, prompt_len=len(req.tokens), output=[],
+                arrival=req.arrival, t_first_token=0.0, t_done=now,
+                finish_reason=FinishReason.SHED)
+            self.stats.shed_requests += 1
+            finished.append(out)
+            self._events.append(StreamEvent(
+                rid=req.rid, token=None, index=0,
+                finish_reason=FinishReason.SHED, output=out))
+
     def _admit(self, finished: list[RequestOutput]):
+        self._shed_expired(finished)
         if self.layout == "paged":
             self._admit_paged(finished)
         else:
@@ -409,30 +483,139 @@ class Engine:
             self.slots.seq_lens = self.slots.seq_lens.at[slot].set(sub_lens[0])
             self.stats.prefill_tokens += len(req.tokens)
             tok = self._sample_first(logits, req)
-            a.t_first_token = time.time()
+            a.t_first_token = self.clock.now()
             a.output.append(tok)
             req.state = RequestState.RUNNING
             self._emit_token(a, slot, tok, finished)
 
-    def _reserve_paged(self, req: Request) -> bool:
-        """Admission policy for ``Scheduler.admit``: reserve the request's
-        whole prompt+decode page footprint (minus prefix-cache hits) and a
-        block-table row, or defer.  The request's own full prompt pages are
-        registered in the prefix cache immediately: admission and prefill run
-        FCFS within one ``_admit_paged`` pass, so a later request admitted in
-        the same pass can hit these pages — their KV is written (donor
-        prefill precedes follower prefill) before anything reads them."""
+    # --------------------------------------------- paged admission/preemption
+    def _gather_pages(self, page_ids: list[int]):
+        """Host copies of the named physical pages from the engine's model
+        cache tree (page axis 1 in every pool/scale leaf) — the payload
+        mover ``PagedCache.offload`` uses under ``alloc_pools=False``."""
+        idx = np.asarray(page_ids, np.int32)
+        return jax.tree_util.tree_map(lambda a: np.asarray(a[:, idx]),
+                                      self.cache)
+
+    def _scatter_pages(self, page_ids: list[int], payload):
+        """Write host pages back into the model cache tree at freshly
+        allocated physical page ids (restore counterpart)."""
+        idx = jnp.asarray(page_ids, jnp.int32)
+        self.cache = jax.tree_util.tree_map(
+            lambda a, h: a.at[:, idx].set(jnp.asarray(h, a.dtype)),
+            self.cache, payload)
+
+    def _ctx_tokens(self, req: Request) -> list[int]:
+        """The token span a preempted request's KV checkpoint covers:
+        prompt plus every generated token already *written* to the cache —
+        the last sampled token is the next decode input, not yet written."""
+        return req.tokens + req.saved_output[:-1]
+
+    def _preempt_victim(self, min_priority: int) -> bool:
+        """Evict the best victim below ``min_priority``: retire it from the
+        batch, checkpoint its private pages to host memory, release its
+        reservation, and re-queue it (PREEMPTED, original queue order, its
+        generated tokens saved for the restore)."""
+        row = self.sched.preemption_victim(min_priority)
+        if row is None:
+            return False
+        a = self.sched.retire(row)
+        req = a.req
+        rec = self.pc.offload(req.rid, gather=self._gather_pages)
+        req.saved_output = a.output
+        req.saved_t_first = a.t_first_token
+        req.state = RequestState.PREEMPTED
+        self.sched.requeue(req)
+        self.stats.preemptions += 1
+        self.stats.offloaded_pages += rec.n_payload_pages
+        self.stats.offloaded_bytes += rec.nbytes
+        return True
+
+    def _try_reserve(self, req: Request) -> bool:
+        """One reservation attempt: restore an offloaded victim, or a fresh
+        prompt+decode footprint reservation with prefix registration."""
+        if req.rid in self.pc.offloaded:
+            info = self.pc.restore(
+                req.rid, self._ctx_tokens(req),
+                reserve=req.max_new_tokens - len(req.saved_output) + 1,
+                scatter=self._scatter_pages)
+            if info is None:
+                return False
+            self._pending_restores[req.rid] = info
+            return True
         if not self.pc.alloc_seq(req.rid, len(req.tokens), tokens=req.tokens,
                                  reserve=req.max_new_tokens):
             return False
         self.pc.register_prefix(req.rid, req.tokens)
         return True
 
+    def _reserve_paged(self, req: Request) -> bool:
+        """Admission policy for ``Scheduler.admit``: reserve the request's
+        whole prompt+decode page footprint (minus prefix-cache hits) and a
+        block-table row, or defer.  The request's own full prompt pages are
+        registered in the prefix cache immediately: admission and prefill run
+        in order within one ``_admit_paged`` pass, so a later request
+        admitted in the same pass can hit these pages — their KV is written
+        (donor prefill precedes follower prefill) before anything reads
+        them.
+
+        When the reservation fails and preemption is enabled, victims
+        strictly below this request's priority are evicted (lowest class
+        first, most-recently-admitted within it) until the reservation fits
+        or no eligible victim remains (DESIGN.md §14)."""
+        ok = self._try_reserve(req)
+        while (not ok and self.config.preemption
+               and self._preempt_victim(req.priority)):
+            ok = self._try_reserve(req)
+        if not ok:
+            self.stats.deferred_admissions += 1
+        return ok
+
+    def _resume_restored(self, req: Request, a: Active, row: int,
+                         info: KV.RestoredSeq):
+        """Re-activate a preempted request after its pages came back
+        on-device: re-attach its generated tokens, recompute any prefix
+        span whose donor evicted while it was offloaded (``[hit_pages,
+        snap_start_page)`` — restore left those pages empty), and republish
+        its full pages to the prefix cache.  No token is sampled here: the
+        next token comes from the next decode step, fed the last generated
+        token — which makes the round trip token-identical under greedy."""
+        pc = self.pc
+        ctx = self._ctx_tokens(req)
+        a.output = req.saved_output
+        a.t_first_token = req.saved_t_first
+        req.saved_output = []
+        gap_start = info.hit_pages * pc.page_size
+        gap_end = info.snap_start_page * pc.page_size
+        if gap_start < gap_end:
+            gap = ctx[gap_start:gap_end]
+            blen = bucket_len(len(gap))
+            toks = np.zeros((1, blen), np.int32)
+            toks[0, :len(gap)] = gap
+            seq_start = jnp.full((1,), gap_start, jnp.int32)
+            _, self.cache, _ = self._prefill_paged(
+                self.params, jnp.asarray(toks), len(gap), self.cache,
+                seq_start, pc.block_tables[row][None])
+            self.stats.prefill_tokens += len(gap)
+        pc.seq_lens = pc.seq_lens.at[row].set(info.length)
+        pc.register_prefix(req.rid, ctx)
+        self.stats.restored_pages += info.restored_pages
+        self.stats.prefix_hit_pages += info.hit_pages
+        self.stats.prefix_hit_tokens += gap_start
+        req.state = RequestState.RUNNING
+
     def _admit_paged(self, finished: list[RequestOutput]):
         pc = self.pc
         for req in self.sched.admit(self._reserve_paged):
             row = pc.row_of(req.rid)
             a = self.sched.activate(req, row)
+            info = self._pending_restores.pop(req.rid, None)
+            if info is not None:
+                # preemption restore: pages are back (host scatter + prefix
+                # re-share already done by _try_reserve); no prefill, no
+                # first-token sample — decode continues where it left off
+                self._resume_restored(req, a, row, info)
+                continue
             hit_pages = pc.prefix_hits.get(req.rid, 0)
             if hit_pages * pc.page_size >= len(req.tokens):
                 # Full-prefix hit (ISSUE 5): a zero-token suffix would make
@@ -461,7 +644,7 @@ class Engine:
             self.stats.prefix_hit_pages += hit_pages
             self.stats.prefix_hit_tokens += hit_tokens
             tok = self._sample_first(logits, req)
-            a.t_first_token = time.time()
+            a.t_first_token = self.clock.now()
             a.output.append(tok)
             req.state = RequestState.RUNNING
             self._emit_token(a, row, tok, finished)
@@ -478,7 +661,7 @@ class Engine:
         out = RequestOutput(
             rid=a.req.rid, prompt_len=len(a.req.tokens), output=a.output,
             arrival=a.req.arrival, t_first_token=a.t_first_token,
-            t_done=time.time(), finish_reason=reason)
+            t_done=self.clock.now(), finish_reason=reason)
         finished.append(out)
         return out
 
@@ -488,6 +671,10 @@ class Engine:
 
     def step(self) -> list[RequestOutput]:
         """One engine iteration: admissions + one fused decode+sample step."""
+        if self.faults is not None:
+            # deterministic fault injection (serving/faults.py): scheduled
+            # page seizures, stalls and aborts fire before admissions
+            self.faults.on_step(self)
         if len(self._events) > self._MAX_PENDING_EVENTS:
             del self._events[:len(self._events) - self._MAX_PENDING_EVENTS]
         finished: list[RequestOutput] = []
@@ -561,14 +748,14 @@ class Engine:
 
     def run(self, *, max_steps: int = 10_000) -> list[RequestOutput]:
         """Drain the queue; returns finished requests with latency stats."""
-        t0 = time.time()
+        t0 = self.clock.now()
         out: list[RequestOutput] = []
         steps = 0
         while not self.sched.idle and steps < max_steps:
             out.extend(self.step())
             self._events.clear()       # run() consumers read outputs, not events
             steps += 1
-        self.stats.wall_s += time.time() - t0
+        self.stats.wall_s += self.clock.now() - t0
         return out
 
     def generate(self, prompts, *, max_new_tokens: int = 32,
@@ -593,7 +780,7 @@ class Engine:
                 for p, sp in zip(prompts, samplings)]
         want = set(rids)
         outs: dict[int, RequestOutput] = {}
-        t0 = time.time()
+        t0 = self.clock.now()
         steps = 0
         while want and not self.sched.idle and steps < max_steps:
             for out in self.step():
@@ -602,7 +789,7 @@ class Engine:
                     want.discard(out.rid)
             self._events.clear()
             steps += 1
-        self.stats.wall_s += time.time() - t0
+        self.stats.wall_s += self.clock.now() - t0
         return [outs[r] for r in rids if r in outs]
 
     def stream(self, *, max_steps: int = 10_000) -> Iterator[StreamEvent]:
@@ -611,7 +798,7 @@ class Engine:
         continuous batching preserved (new submissions made while iterating
         are admitted and interleaved).  Terminal events carry the request's
         ``RequestOutput``; aborts surface as terminal events too."""
-        t0 = time.time()
+        t0 = self.clock.now()
         steps = 0
         try:
             while not self.sched.idle and steps < max_steps:
@@ -620,4 +807,4 @@ class Engine:
             # e.g. an abort() that idled the engine mid-iteration
             yield from self.drain_events()
         finally:
-            self.stats.wall_s += time.time() - t0
+            self.stats.wall_s += self.clock.now() - t0

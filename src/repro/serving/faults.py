@@ -1,0 +1,122 @@
+"""Deterministic serving fault injection (DESIGN.md §14).
+
+A ``FaultInjector`` is handed to the engine via ``EngineConfig.faults``;
+``Engine.step()`` calls ``on_step(engine)`` once at the top of every
+iteration (before admissions), so every injected fault lands at a
+reproducible point in the request schedule:
+
+* **page-pool exhaustion** — ``exhaust_pages_at(step, n)`` seizes ``n``
+  pages from the paged free list (refcounted like a live sequence, so
+  nothing else can allocate them) and ``release_pages_at(step)`` gives
+  them back.  This is how tests and ``bench_serving.py`` force admission
+  deferral and preemption without building giant workloads.
+* **step-time stalls** — ``stall_at(step, fn)`` runs ``fn`` at that step;
+  with a ``ManualClock`` the canonical ``fn`` advances the clock past the
+  worker watchdog timeout (no real sleeping), driving stall detection
+  deterministically.
+* **mid-stream aborts** — ``abort_at(step, rid)`` cancels a request while
+  it is decoding, exactly like a client disconnect at that instant.
+
+The injector also works standalone against a ``PagedCache`` via
+``seize_pages``/``release_seized`` for unit tests that bypass the engine.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+
+class FaultInjector:
+    """Schedules faults by engine step number (0-based, counted across
+    ``Engine.step()`` calls).  One injector drives one engine."""
+
+    def __init__(self):
+        self.step_no = 0
+        self._stalls: dict[int, Callable[[], None]] = {}
+        self._aborts: dict[int, list[int]] = {}
+        self._exhaust: dict[int, int] = {}
+        self._release_at: set[int] = set()
+        self._seized: list[int] = []
+        self._seized_pc = None
+        # (step, kind, detail) record of every fault that actually fired
+        self.log: list[tuple[int, str, object]] = []
+
+    # ------------------------------------------------------------- scheduling
+    def stall_at(self, step: int, fn: Callable[[], None]) -> "FaultInjector":
+        self._stalls[step] = fn
+        return self
+
+    def abort_at(self, step: int, rid: int) -> "FaultInjector":
+        self._aborts.setdefault(step, []).append(rid)
+        return self
+
+    def exhaust_pages_at(self, step: int, n: int) -> "FaultInjector":
+        self._exhaust[step] = n
+        return self
+
+    def release_pages_at(self, step: int) -> "FaultInjector":
+        self._release_at.add(step)
+        return self
+
+    # ------------------------------------------------------- page pool faults
+    def seize_pages(self, pc, n: int) -> int:
+        """Take up to ``n`` pages out of the free list, refcounted so they
+        look allocated to every admission/reservation path.  Returns how
+        many were actually seized (the free list may be shorter)."""
+        if self._seized and self._seized_pc is not pc:
+            raise RuntimeError("injector already holds pages of another pool")
+        taken = 0
+        while taken < n and pc.free_list:
+            p = pc.free_list.pop()
+            pc.refcount[p] += 1
+            self._seized.append(p)
+            taken += 1
+        self._seized_pc = pc if self._seized else None
+        return taken
+
+    def release_seized(self, pc=None) -> int:
+        """Return every seized page to its pool's free list."""
+        pc = pc if pc is not None else self._seized_pc
+        released = 0
+        while self._seized:
+            p = self._seized.pop()
+            pc.refcount[p] -= 1
+            if pc.refcount[p] == 0:
+                pc.free_list.append(p)
+                released += 1
+        self._seized_pc = None
+        return released
+
+    @property
+    def seized_pages(self) -> int:
+        return len(self._seized)
+
+    # ------------------------------------------------------------ engine hook
+    def on_step(self, engine) -> None:
+        """Called by ``Engine.step()`` before admissions; fires every fault
+        scheduled for the current step number."""
+        s = self.step_no
+        self.step_no += 1
+        for rid in self._aborts.pop(s, []):
+            # the RequestOutput lands in the log (abort() returns it to its
+            # caller, not through step()'s finished list)
+            self.log.append((s, "abort", engine.abort(rid)))
+        n = self._exhaust.pop(s, None)
+        if n is not None:
+            got = self.seize_pages(engine.pc, n)
+            self.log.append((s, "exhaust_pages", got))
+        if s in self._release_at:
+            self._release_at.discard(s)
+            got = self.release_seized(engine.pc)
+            self.log.append((s, "release_pages", got))
+        fn = self._stalls.pop(s, None)
+        if fn is not None:
+            fn()
+            self.log.append((s, "stall", None))
+
+
+def clock_stall(clock, dt: float) -> Callable[[], None]:
+    """A stall action for ``stall_at``: advance a ``ManualClock`` by ``dt``
+    seconds — the deterministic stand-in for a step that took that long."""
+    def _advance():
+        clock.advance(dt)
+    return _advance

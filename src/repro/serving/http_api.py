@@ -15,6 +15,14 @@ each request's ``StreamEvent``s come back on a per-request queue.  Requests
 submitted while others are decoding join the running batch — continuous
 batching straight through HTTP.
 
+Overload behaviour (DESIGN.md §14): bounded admission maps
+``QueueFullError`` to **429** with a ``Retry-After`` header; a request shed
+on its queue deadline gets **503** (+ ``Retry-After``); and when
+``stall_timeout_s`` is set, a watchdog thread monitors the worker's
+heartbeat and fails every in-flight request with ``FinishReason.STALL``
+(**503** on the blocking path, a terminal SSE chunk on the streaming path)
+instead of letting clients hang on a wedged engine.
+
     eng = Engine(model, params, EngineConfig(...))
     server = make_server(eng, port=8000, model_name=cfg.name)
     server.serve_forever()          # or launch/serve.py --serve
@@ -25,9 +33,10 @@ import dataclasses
 import json
 import queue
 import threading
-import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
+from repro.runtime.fault_tolerance import Heartbeat
+from repro.serving.api import FinishReason, QueueFullError, StreamEvent
 from repro.serving.sampler import SamplingParams
 
 # how long a handler waits for the next token before giving up on the worker
@@ -42,6 +51,8 @@ class _Submission:
     sampling: SamplingParams
     stop_token_ids: tuple[int, ...]
     ignore_eos: bool
+    priority: int = 0
+    queue_timeout_s: float | None = None
     # per-request StreamEvent fan-out queue, and the rid/Exception handshake
     events: queue.Queue = dataclasses.field(default_factory=queue.Queue)
     reply: queue.Queue = dataclasses.field(default_factory=queue.Queue)
@@ -54,15 +65,38 @@ class EngineWorker(threading.Thread):
     ``Engine.step_events()`` while requests are in flight, and fans each
     event out to its request's subscriber queue.  Idle polling is a short
     blocking ``inbox.get`` — no busy loop.
+
+    With ``stall_timeout_s`` set, the loop beats a ``Heartbeat`` (read
+    through the engine's injectable clock) each iteration and a watchdog
+    thread ``check()``s it from outside.  On a stall the watchdog cannot
+    touch the wedged engine — it fails the *clients*: every subscriber
+    queue gets a synthetic terminal ``StreamEvent`` with
+    ``FinishReason.STALL`` (``output is None``) and is unsubscribed, so no
+    stream ever hangs past the timeout.
     """
 
-    def __init__(self, engine, idle_poll_s: float = 0.02):
+    def __init__(self, engine, idle_poll_s: float = 0.02,
+                 stall_timeout_s: float | None = None):
         super().__init__(daemon=True, name="engine-worker")
         self.eng = engine
         self.idle_poll_s = idle_poll_s
         self.inbox: "queue.Queue[tuple[str, object]]" = queue.Queue()
         self._halt = threading.Event()
         self._subs: dict[int, queue.Queue] = {}
+        self._subs_lock = threading.Lock()
+        self.stalled_requests = 0
+        self.heartbeat: Heartbeat | None = None
+        self._watchdog: threading.Thread | None = None
+        if stall_timeout_s is not None:
+            self.heartbeat = Heartbeat(timeout_s=stall_timeout_s,
+                                       clock=engine.clock.now)
+            self._watchdog = threading.Thread(
+                target=self._watch, daemon=True, name="engine-watchdog")
+
+    def start(self):
+        super().start()
+        if self._watchdog is not None:
+            self._watchdog.start()
 
     # ---------------------------------------------- handler-thread interface
     def submit(self, sub: _Submission) -> int:
@@ -90,11 +124,14 @@ class EngineWorker(threading.Thread):
                     sub.tokens, max_new_tokens=sub.max_new_tokens,
                     sampling=sub.sampling,
                     stop_token_ids=sub.stop_token_ids,
-                    ignore_eos=sub.ignore_eos)
-            except Exception as e:          # validation error -> HTTP 400
+                    ignore_eos=sub.ignore_eos,
+                    priority=sub.priority,
+                    queue_timeout_s=sub.queue_timeout_s)
+            except Exception as e:    # validation -> 400, QueueFull -> 429
                 sub.reply.put(e)
                 return
-            self._subs[rid] = sub.events
+            with self._subs_lock:
+                self._subs[rid] = sub.events
             sub.reply.put(rid)
         elif op == "abort":
             self.eng.abort(payload)          # terminal event reaches the
@@ -105,14 +142,37 @@ class EngineWorker(threading.Thread):
 
     def _fan_out(self, events):
         for ev in events:
-            q = self._subs.get(ev.rid)
+            with self._subs_lock:
+                q = self._subs.get(ev.rid)
+                if q is not None and ev.finish_reason is not None:
+                    self._subs.pop(ev.rid, None)
             if q is not None:
                 q.put(ev)
-                if ev.finish_reason is not None:
-                    self._subs.pop(ev.rid, None)
+
+    def _fail_subs(self, reason: FinishReason):
+        """Watchdog path: terminate every subscribed client with a synthetic
+        terminal event (``output is None`` — the engine never produced a
+        ``RequestOutput``) and drop the subscriptions."""
+        with self._subs_lock:
+            victims = list(self._subs.items())
+            self._subs.clear()
+        for rid, q in victims:
+            self.stalled_requests += 1
+            q.put(StreamEvent(rid=rid, token=None, index=0,
+                              finish_reason=reason, output=None))
+
+    def _watch(self):
+        hb = self.heartbeat
+        poll_s = min(0.05, hb.timeout_s / 4)
+        while not self._halt.is_set():
+            if not hb.check():
+                self._fail_subs(FinishReason.STALL)
+            self._halt.wait(poll_s)
 
     def run(self):
         while not self._halt.is_set():
+            if self.heartbeat is not None:
+                self.heartbeat.beat()
             while True:                      # drain all pending control ops
                 try:
                     op, payload = self.inbox.get_nowait()
@@ -146,6 +206,11 @@ def _parse_completion_body(body: dict) -> _Submission:
         stop = [stop]
     if not isinstance(stop, list) or not all(isinstance(t, int) for t in stop):
         raise ValueError("'stop' must be a token id or list of token ids")
+    timeout = body.get("queue_timeout_s")
+    if timeout is not None:
+        timeout = float(timeout)
+        if timeout <= 0:
+            raise ValueError("'queue_timeout_s' must be > 0")
     return _Submission(
         tokens=list(prompt),
         max_new_tokens=int(body.get("max_tokens", 16)),
@@ -155,7 +220,9 @@ def _parse_completion_body(body: dict) -> _Submission:
             top_p=float(body.get("top_p", 1.0)),
             greedy=temperature == 0.0),
         stop_token_ids=tuple(stop),
-        ignore_eos=bool(body.get("ignore_eos", False)))
+        ignore_eos=bool(body.get("ignore_eos", False)),
+        priority=int(body.get("priority", 0)),
+        queue_timeout_s=timeout)
 
 
 def _choice(ev_or_tokens, finish_reason=None) -> dict:
@@ -179,11 +246,14 @@ class CompletionsHandler(BaseHTTPRequestHandler):
     def worker(self) -> EngineWorker:
         return self.server.worker
 
-    def _json(self, code: int, payload: dict):
+    def _json(self, code: int, payload: dict,
+              headers: dict | None = None):
         data = json.dumps(payload).encode()
         self.send_response(code)
         self.send_header("Content-Type", "application/json")
         self.send_header("Content-Length", str(len(data)))
+        for k, v in (headers or {}).items():
+            self.send_header(k, v)
         self.end_headers()
         self.wfile.write(data)
 
@@ -210,6 +280,12 @@ class CompletionsHandler(BaseHTTPRequestHandler):
             return
         try:
             rid = self.worker.submit(sub)
+        except QueueFullError as e:          # bounded admission -> shed early
+            self._json(429, {"error": {"message": str(e),
+                                       "type": "overloaded_error"}},
+                       headers={"Retry-After":
+                                str(max(1, int(e.retry_after_s)))})
+            return
         except (ValueError, queue.Empty) as e:
             self._json(400, {"error": {"message": str(e),
                                        "type": "invalid_request_error"}})
@@ -222,10 +298,12 @@ class CompletionsHandler(BaseHTTPRequestHandler):
     # ------------------------------------------------------------ responses
     def _envelope(self, rid: int) -> dict:
         return {"id": f"cmpl-{rid}", "object": "text_completion",
-                "created": int(time.time()), "model": self.server.model_name}
+                "created": int(self.worker.eng.clock.now()),
+                "model": self.server.model_name}
 
     def _blocking_response(self, rid: int, sub: _Submission):
         toks: list[int] = []
+        reason = None
         out = None
         while True:
             try:
@@ -241,10 +319,20 @@ class CompletionsHandler(BaseHTTPRequestHandler):
             if ev.token is not None:
                 toks.append(ev.token)
             if ev.finish_reason is not None:
-                out = ev.output
+                reason = ev.finish_reason
+                out = ev.output         # None on synthetic watchdog events
                 break
+        if reason in (FinishReason.SHED, FinishReason.STALL):
+            # overload outcome: 503 + Retry-After; the SHED request never
+            # produced a token, the STALL one may have partial output the
+            # client opted not to stream
+            self._json(503, {"error": {
+                "message": f"request {reason.value} under overload",
+                "type": "overloaded_error"}},
+                headers={"Retry-After": "1"})
+            return
         resp = self._envelope(rid)
-        resp["choices"] = [_choice(toks, out.finish_reason)]
+        resp["choices"] = [_choice(toks, reason)]
         resp["usage"] = {
             "prompt_tokens": out.prompt_len, "completion_tokens": len(toks),
             "total_tokens": out.prompt_len + len(toks)}
@@ -300,11 +388,13 @@ class CompletionsServer(ThreadingHTTPServer):
 
 
 def make_server(engine, host: str = "127.0.0.1", port: int = 0,
-                model_name: str = "repro") -> CompletionsServer:
+                model_name: str = "repro",
+                stall_timeout_s: float | None = None) -> CompletionsServer:
     """Start the engine worker and bind the HTTP server (``port=0`` picks an
     ephemeral port — read it back from ``server.port``).  The caller runs
-    ``server.serve_forever()``; ``server.shutdown()`` stops both."""
-    worker = EngineWorker(engine)
+    ``server.serve_forever()``; ``server.shutdown()`` stops both.
+    ``stall_timeout_s`` arms the worker watchdog (DESIGN.md §14)."""
+    worker = EngineWorker(engine, stall_timeout_s=stall_timeout_s)
     worker.start()
     return CompletionsServer((host, port), CompletionsHandler,
                              worker=worker, model_name=model_name)

@@ -25,11 +25,23 @@ int8 payloads with parallel symmetric-scale pools, quantize-on-write /
 dequantize-on-read fused into every data-path method (DESIGN.md §12).
 ``PagedCache`` supports per-token *and* per-page scale granularity; scale
 pools ride along with their pages through copy-on-write and prefix sharing.
+
+Overload resilience (DESIGN.md §14): ``offload(seq_id)`` checkpoints a
+sequence's private pages to host memory and releases everything it holds
+(shared prefix pages are *released, not copied* — their payload stays live
+on device under the donor's refcount); ``restore(seq_id)`` re-allocates
+through the normal admission path (prefix-cache hits included) and scatters
+the host snapshot back.  Payload movement is pluggable (``gather``/
+``scatter`` callables) because the engine keeps page payloads in its model
+cache tree (``alloc_pools=False``); with ``alloc_pools=True`` the cache
+moves its own pools.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Any, Callable, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -76,6 +88,38 @@ class SlotCache:
     @property
     def num_free(self) -> int:
         return len(self._free)
+
+
+@dataclasses.dataclass
+class OffloadedSeq:
+    """Host-memory checkpoint of a preempted sequence (DESIGN.md §14).
+
+    ``payload`` is a host copy of the sequence's *private* pages (logical
+    pages ``[shared_pages, pages_needed(length))`` — page axis 1 in every
+    leaf, scale pools riding along).  The leading ``shared_pages`` full
+    prefix pages were shared (refcount > 1) at offload time and were
+    released without copying: their payload stays live on device under the
+    donor's refcount, and restore re-finds them through the hashed-prefix
+    cache — or recomputes them if the donor has since evicted."""
+    seq_id: int
+    length: int                 # context tokens the snapshot covers
+    shared_pages: int           # leading prefix pages released, not copied
+    payload: Any                # host pytree, page axis 1 (None when empty)
+    n_payload_pages: int
+    nbytes: int                 # host bytes held by ``payload``
+
+
+@dataclasses.dataclass
+class RestoredSeq:
+    """What ``restore`` did, for the engine's bookkeeping: prefix pages
+    re-shared from the live cache, where the host snapshot started, and the
+    pages scattered back.  Logical pages ``[hit_pages, snap_start_page)``
+    (non-empty only when the donor evicted while this sequence was
+    offloaded) hold no data — the caller must recompute that token span."""
+    hit_pages: int
+    snap_start_page: int
+    length: int
+    restored_pages: int
 
 
 @dataclasses.dataclass
@@ -136,10 +180,21 @@ class PagedCache:
                                       jnp.int32)
         self.rows: dict[int, int] = {}
         self._free_rows = list(range(self.max_seqs))[::-1]
-        # hashed-prefix cache: chain-hash of page-aligned token prefixes
+        # hashed-prefix cache: chain-hash of page-aligned token prefixes.
+        # The chain is seeded with the KV quant mode (ISSUE 6 satellite /
+        # ROADMAP carry-over): pages written under one quant config can
+        # never be served to a lookup under another — int8 payloads+scales
+        # and bf16 payloads for the same tokens are different bytes, so
+        # their keys must differ once prefix indexes outlive one cache
+        # instance (persisted prefix caches, engine restarts).
+        quant_tag = ((self.kv_quant.dtype, self.kv_quant.granularity)
+                     if quantized else ("fp", str(self.compute_dtype)))
+        self._hash_seed = hash(("kv_quant_mode",) + quant_tag)
         self._prefix_index: dict[int, int] = {}      # hash key -> page id
         self._page_key: dict[int, int] = {}          # page id -> hash key
         self.prefix_hits: dict[int, int] = {}        # seq_id -> pages reused
+        # preempted sequences' host-memory page checkpoints (DESIGN.md §14)
+        self.offloaded: dict[int, OffloadedSeq] = {}
 
     # ------------------------------------------------------------ bookkeeping
     def pages_needed(self, n_tokens: int) -> int:
@@ -164,8 +219,10 @@ class PagedCache:
         self.block_tables = self.block_tables.at[row].set(jnp.asarray(arr))
 
     def _prefix_keys(self, tokens) -> list[int]:
-        """Chain hashes of each full-page-aligned prefix of ``tokens``."""
-        keys, key = [], 0
+        """Chain hashes of each full-page-aligned prefix of ``tokens``,
+        seeded with the KV quant mode so distinct quant configs can never
+        collide on the same token prefix."""
+        keys, key = [], self._hash_seed
         for i in range(len(tokens) // self.page_size):
             page = tuple(tokens[i * self.page_size:(i + 1) * self.page_size])
             key = hash((key, page))
@@ -307,6 +364,131 @@ class PagedCache:
             if key not in self._prefix_index and page not in self._page_key:
                 self._prefix_index[key] = page
                 self._page_key[page] = key
+
+    # ------------------------------------------------------- offload / restore
+    def _gather_pages_local(self, page_ids):
+        """Default payload gather for ``alloc_pools=True``: host copies of
+        the named physical pages from this cache's own pools (page axis 1),
+        scale pools included."""
+        self._require_pools()
+        idx = np.asarray(page_ids, np.int32)
+        tree = {"k_pages": self.k_pages, "v_pages": self.v_pages}
+        if self.k_scales is not None:
+            tree.update(k_scales=self.k_scales, v_scales=self.v_scales)
+        return jax.tree_util.tree_map(lambda a: np.asarray(a[:, idx]), tree)
+
+    def _scatter_pages_local(self, page_ids, payload):
+        """Default payload scatter: write host pages back into this cache's
+        pools at the (freshly allocated) physical page ids."""
+        self._require_pools()
+        idx = jnp.asarray(page_ids, jnp.int32)
+        self.k_pages = self.k_pages.at[:, idx].set(
+            jnp.asarray(payload["k_pages"]))
+        self.v_pages = self.v_pages.at[:, idx].set(
+            jnp.asarray(payload["v_pages"]))
+        if self.k_scales is not None:
+            self.k_scales = self.k_scales.at[:, idx].set(
+                jnp.asarray(payload["k_scales"]))
+            self.v_scales = self.v_scales.at[:, idx].set(
+                jnp.asarray(payload["v_scales"]))
+
+    def offload(self, seq_id: int,
+                gather: Optional[Callable] = None) -> OffloadedSeq:
+        """Swap a live sequence out to host memory and release everything
+        it holds on device (DESIGN.md §14).
+
+        Refcount- and COW-correct: leading *shared* full prefix pages
+        (refcount > 1) are released, never copied — their payload stays
+        live under the donor's refcount and restore re-shares (or, if the
+        donor evicted, recomputes) them.  Private pages covering the rest
+        of ``[0, length)`` are copied to host via ``gather(page_ids)``
+        (page axis 1; the engine passes a gatherer over its model cache
+        tree, ``alloc_pools=True`` caches copy their own pools).  Reserve
+        pages past the written extent hold no data and are just released.
+        The block-table row, free list and prefix index are left exactly as
+        ``free_seq`` leaves them; the checkpoint is recorded in
+        ``self.offloaded`` until ``restore`` or ``drop_offloaded``.
+        """
+        if seq_id in self.offloaded:
+            raise ValueError(f"seq {seq_id} is already offloaded")
+        table = self.tables[seq_id]
+        length = self.lengths[seq_id]
+        used = self.pages_needed(length)
+        shared = 0
+        while shared < used and self.refcount[table[shared]] > 1:
+            shared += 1
+        for li in range(shared, used):
+            # the engine only ever shares leading full prefix pages; a
+            # shared page after a private one would be silently lost here
+            if self.refcount[table[li]] > 1:
+                raise RuntimeError(
+                    f"seq {seq_id}: shared page at logical index {li} after "
+                    f"private pages — offload supports leading-prefix "
+                    f"sharing only")
+        snap_ids = table[shared:used]
+        payload = None
+        nbytes = 0
+        if snap_ids:
+            gather = gather if gather is not None else self._gather_pages_local
+            payload = gather(list(snap_ids))
+            nbytes = sum(leaf.nbytes
+                         for leaf in jax.tree_util.tree_leaves(payload))
+        rec = OffloadedSeq(seq_id=seq_id, length=length, shared_pages=shared,
+                           payload=payload, n_payload_pages=len(snap_ids),
+                           nbytes=nbytes)
+        self.free_seq(seq_id)
+        self.offloaded[seq_id] = rec
+        return rec
+
+    def restore(self, seq_id: int, tokens, *, reserve: int = 0,
+                scatter: Optional[Callable] = None) -> Optional[RestoredSeq]:
+        """Bring an offloaded sequence back on device.
+
+        ``tokens`` must be the full context the checkpoint covers (prompt +
+        generated-so-far) — it drives hashed-prefix re-sharing through the
+        normal ``alloc_seq`` path, so prefix pages that survived on device
+        are shared again instead of re-materialized.  The host snapshot is
+        scattered into the freshly allocated private pages; logical pages
+        ``[hit_pages, snap_start_page)`` — prefix pages whose donor evicted
+        while this sequence was off-device — come back *empty* and the
+        caller must recompute that token span (the engine re-prefills it).
+        Returns None (checkpoint kept, no state change) when pages or rows
+        are unavailable; the caller retries later.
+        """
+        rec = self.offloaded[seq_id]
+        if len(tokens) != rec.length:
+            raise ValueError(
+                f"restore of seq {seq_id} got {len(tokens)} tokens but the "
+                f"checkpoint covers {rec.length}")
+        if not self.alloc_seq(seq_id, rec.length, tokens=list(tokens),
+                              reserve=reserve):
+            return None
+        hit = self.prefix_hits.get(seq_id, 0)
+        used = self.pages_needed(rec.length)
+        start = max(hit, rec.shared_pages)
+        restored = 0
+        if start < used:
+            dest = self.tables[seq_id][start:used]
+            off = start - rec.shared_pages
+            payload = jax.tree_util.tree_map(
+                lambda a: a[:, off:off + len(dest)], rec.payload)
+            scatter = (scatter if scatter is not None
+                       else self._scatter_pages_local)
+            scatter(list(dest), payload)
+            restored = len(dest)
+        del self.offloaded[seq_id]
+        return RestoredSeq(hit_pages=hit, snap_start_page=rec.shared_pages,
+                           length=rec.length, restored_pages=restored)
+
+    def drop_offloaded(self, seq_id: int) -> Optional[OffloadedSeq]:
+        """Discard a checkpoint without restoring (aborted while
+        preempted)."""
+        return self.offloaded.pop(seq_id, None)
+
+    @property
+    def offloaded_bytes(self) -> int:
+        """Host bytes currently held by offloaded checkpoints."""
+        return sum(rec.nbytes for rec in self.offloaded.values())
 
     # -------------------------------------------------------------- data path
     def _require_pools(self):

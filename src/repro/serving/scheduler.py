@@ -1,9 +1,17 @@
-"""Continuous-batching scheduler: FCFS admission into decode slots, bucketed
-prefill lengths (bounded jit recompiles), per-request lifecycle tracking."""
+"""Continuous-batching scheduler: priority-class admission into decode
+slots, bucketed prefill lengths (bounded jit recompiles), per-request
+lifecycle tracking.
+
+Admission order is (priority desc, submission order asc) — FCFS within a
+priority class, strictly higher classes first.  Preempted requests re-enter
+the queue via ``requeue`` keeping their original submission order, so a
+restored victim goes back to the head of its class (it has progress; letting
+it finish frees capacity soonest).
+"""
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
+import itertools
 from typing import Callable, Optional, Union
 
 from repro.serving.api import RequestOutput, RequestState
@@ -26,6 +34,16 @@ class Request:
     stop_token_ids: tuple[int, ...] = ()
     ignore_eos: bool = False
     state: RequestState = RequestState.QUEUED
+    # ---- overload resilience (ISSUE 6 / DESIGN.md §14) ----
+    priority: int = 0                    # higher = admitted (and kept) first
+    # absolute clock time after which a still-QUEUED request is shed
+    queue_deadline: float | None = None
+    # preemption checkpoint: generated tokens + first-token timestamp saved
+    # when the request is evicted mid-decode, consumed on restore
+    saved_output: list[int] = dataclasses.field(default_factory=list)
+    saved_t_first: float = 0.0
+    # queue position (assigned once at first submit; stable across requeues)
+    order: int | None = None
 
 
 @dataclasses.dataclass
@@ -34,6 +52,9 @@ class Active:
     slot: int
     output: list[int] = dataclasses.field(default_factory=list)
     t_first_token: float = 0.0
+    # monotone admission stamp — preemption picks the most-recently-admitted
+    # victim within the lowest priority class (it has the least sunk work)
+    admit_seq: int = 0
 
 
 PREFILL_BUCKETS = (32, 64, 128, 256, 512, 1024, 2048, 4096)
@@ -56,38 +77,69 @@ class Scheduler:
     """Order + admission policy. The engine asks it what to do each step."""
 
     def __init__(self):
-        self.waiting: deque[Request] = deque()
+        self.waiting: list[Request] = []
         self.active: dict[int, Active] = {}
+        self._order = itertools.count()
+        self._admit_seq = itertools.count(1)
+
+    @staticmethod
+    def _key(req: Request):
+        return (-req.priority, req.order)
+
+    def _insert(self, req: Request):
+        self.waiting.append(req)
+        self.waiting.sort(key=self._key)
 
     def submit(self, req: Request):
         req.state = RequestState.QUEUED
-        self.waiting.append(req)
+        if req.order is None:
+            req.order = next(self._order)
+        self._insert(req)
+
+    def requeue(self, req: Request):
+        """Re-queue a preempted request.  Keeps its original submission
+        order (head of its priority class among later arrivals) and its
+        PREEMPTED state — ``pop_expired`` never sheds a request that
+        already holds generated tokens."""
+        self._insert(req)
 
     def admit(self, budget: Union[int, Callable[[Request], bool]]
               ) -> list[Request]:
-        """FCFS admission under a resource budget.
+        """Priority-then-FCFS admission under a resource budget.
 
         ``budget`` is either a free-slot count (the slot-cache path) or a
         reservation policy called on the queue head — it commits resources
-        (pages + a block-table row in the paged path) and returns whether the
-        request was admitted.  FCFS is strict: the first request that does
-        not fit stops admission (no skipping), so exhaustion defers rather
-        than reorders.
+        (pages + a block-table row in the paged path; possibly after
+        preempting a victim) and returns whether the request was admitted.
+        Order is strict: the first request that does not fit stops admission
+        (no skipping), so exhaustion defers rather than reorders within and
+        across priority classes.
         """
         out = []
         if callable(budget):
             while self.waiting and budget(self.waiting[0]):
-                out.append(self.waiting.popleft())
+                out.append(self.waiting.pop(0))
         else:
             while self.waiting and budget > 0:
-                out.append(self.waiting.popleft())
+                out.append(self.waiting.pop(0))
                 budget -= 1
         for req in out:
             req.state = RequestState.PREFILL
         return out
 
+    def pop_expired(self, now: float) -> list[Request]:
+        """Remove and return queued requests whose queue deadline has
+        passed.  Preempted requests are exempt — their deadline was met at
+        first admission and they hold generated tokens."""
+        expired = [r for r in self.waiting
+                   if r.queue_deadline is not None and now > r.queue_deadline
+                   and r.state is RequestState.QUEUED]
+        for r in expired:
+            self.waiting.remove(r)
+        return expired
+
     def activate(self, req: Request, slot: int) -> Active:
-        a = Active(req=req, slot=slot)
+        a = Active(req=req, slot=slot, admit_seq=next(self._admit_seq))
         self.active[slot] = a
         return a
 
@@ -95,7 +147,7 @@ class Scheduler:
         return self.active.pop(slot)
 
     def cancel(self, rid: int) -> Optional[Request]:
-        """Remove a still-queued request (abort-before-admission)."""
+        """Remove a still-queued (or preempted-and-requeued) request."""
         for i, req in enumerate(self.waiting):
             if req.rid == rid:
                 del self.waiting[i]
@@ -108,6 +160,20 @@ class Scheduler:
             if a.req.rid == rid:
                 return row, a
         return None
+
+    def preemption_victim(self, min_priority: int) -> Optional[int]:
+        """Row of the best victim for a priority-``min_priority`` admission:
+        lowest priority strictly below it, most-recently-admitted within
+        that class.  None when nothing is eligible (preempting an equal or
+        higher class would livelock)."""
+        best = None
+        for row, a in self.active.items():
+            if a.req.priority >= min_priority:
+                continue
+            key = (a.req.priority, -a.admit_seq)
+            if best is None or key < best[0]:
+                best = (key, row)
+        return None if best is None else best[1]
 
     @property
     def idle(self) -> bool:

@@ -9,6 +9,10 @@
   ``src/``, ``examples/`` and ``benchmarks/`` must construct the engine via
   ``Engine(model, params, EngineConfig(...))`` — the legacy 10-kwarg shim
   exists only for out-of-repo callers (and the tests that cover it).
+* Injectable clocks in serving (ISSUE 6 satellite): no serving module may
+  call ``time.time``/``time.monotonic`` directly — every deadline and
+  timestamp must read through the engine's injectable clock
+  (``serving/clock.py``), or overload tests cannot control time.
 """
 from __future__ import annotations
 
@@ -108,6 +112,42 @@ def test_no_in_repo_legacy_engine_kwargs():
             for fn in files:
                 if fn.endswith(".py"):
                     problems += _legacy_engine_calls(os.path.join(dirpath, fn))
+    assert not problems, "\n".join(problems)
+
+
+_BANNED_TIME_CALLS = frozenset({"time", "monotonic", "monotonic_ns",
+                                "time_ns", "perf_counter"})
+
+
+def _direct_time_calls(path: str) -> list[str]:
+    with open(path) as f:
+        tree = ast.parse(f.read(), filename=path)
+    hits = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        if (isinstance(fn, ast.Attribute) and fn.attr in _BANNED_TIME_CALLS
+                and isinstance(fn.value, ast.Name)
+                and fn.value.id == "time"):
+            hits.append(
+                f"{path}:{node.lineno}: direct time.{fn.attr}() in a serving "
+                f"module — read the engine's injectable clock "
+                f"(serving/clock.py) instead")
+    return hits
+
+
+def test_serving_uses_injectable_clock():
+    """Serving deadline/timestamp logic must be testable without sleeping:
+    ``serving/clock.py::SystemClock`` is the single permitted ``time.time``
+    call site; everything else in ``src/repro/serving/`` reads
+    ``engine.clock.now()`` (DESIGN.md §14)."""
+    serving = os.path.join(SRC, "repro", "serving")
+    problems: list[str] = []
+    for dirpath, _dirs, files in os.walk(serving):
+        for fn in files:
+            if fn.endswith(".py") and fn != "clock.py":
+                problems += _direct_time_calls(os.path.join(dirpath, fn))
     assert not problems, "\n".join(problems)
 
 
