@@ -13,6 +13,13 @@ Interpret-mode wall-clock on CPU: the numbers validate the serving harness
 and track the *relative* slot-vs-paged / bf16-vs-int8 trajectory across PRs,
 not TPU performance.  Emits CSV lines through benchmarks/run.py and writes
 the structured record to BENCH_serving.json at the repo root.
+
+Observability (ISSUE 7): every percentile below is derived from the
+engine's metrics-registry histograms (``Histogram.quantile`` over explicit
+buckets) — the same numbers a Prometheus scrape of ``/metrics`` would
+yield — instead of private per-request lists; each record also embeds the
+registry ``snapshot()``.  ``run(trace_out=...)`` attaches a step-span
+tracer to the preemption overload run and exports a Perfetto trace.
 """
 from __future__ import annotations
 
@@ -35,6 +42,7 @@ from repro.serving.api import EngineConfig, FinishReason, QueueFullError
 from repro.serving.clock import ManualClock
 from repro.serving.engine import Engine
 from repro.serving.kv_quant import KVQuantConfig, page_bytes
+from repro.serving.tracing import Tracer
 
 N_REQUESTS = 8
 MAX_NEW = 6
@@ -61,11 +69,12 @@ JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                          os.pardir, "BENCH_serving.json")
 
 
-def _pct(xs, unit=1.0) -> dict:
-    if not xs:
-        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
-    return {p: float(np.percentile(xs, q)) * unit
-            for p, q in (("p50", 50), ("p95", 95), ("p99", 99))}
+def _hist_pct(h) -> dict:
+    """p50/p95/p99 estimated from histogram buckets — what
+    ``histogram_quantile`` over a /metrics scrape computes (``h`` is a
+    ``Family`` aggregate or one labeled ``Histogram`` child)."""
+    return {p: round(h.quantile(q), 6)
+            for p, q in (("p50", 0.50), ("p95", 0.95), ("p99", 0.99))}
 
 
 def _run_engine(model, params, conf, prompts, max_new):
@@ -74,14 +83,17 @@ def _run_engine(model, params, conf, prompts, max_new):
     outs = eng.generate(prompts, max_new_tokens=max_new, ignore_eos=True)
     dt = time.time() - t0
     toks = sum(len(o.output) for o in outs)
+    m = eng.metrics
     rec = {
         "requests": len(outs), "tokens": toks, "wall_s": dt,
         "tok_per_s_interpret": toks / dt if dt else 0.0,
-        "ttft_s": _pct([o.ttft for o in outs]),
-        "tpot_s": _pct([o.tpot for o in outs if o.tpot > 0]),
-        "latency_s": _pct([o.latency for o in outs]),
+        "ttft_s": _hist_pct(m.ttft),
+        "tpot_s": _hist_pct(m.tpot),
+        "latency_s": _hist_pct(m.request_latency),
+        "queue_wait_s": _hist_pct(m.queue_wait),
         "peak_active": eng.stats.peak_active,
         "finish_reasons": sorted({o.finish_reason.value for o in outs}),
+        "metrics": m.registry.snapshot(),
     }
     return eng, outs, rec
 
@@ -95,11 +107,14 @@ def _cache_bytes(cfg, eng, conf) -> int:
                                dtype=eng.cache_dtype, kv_quant=eng.kv_quant)
 
 
-def _overload_run(cfg, model, params, kern, *, preemption: bool) -> dict:
+def _overload_run(cfg, model, params, kern, *, preemption: bool,
+                  tracer: Tracer | None = None) -> dict:
     """Open-loop overload: requests arrive on a Poisson process (with a 4x
     burst window) in *simulated* time — the engine clock advances OVL_STEP_DT
     per step regardless of interpret-mode wall time, so TTFT percentiles
-    measure queueing + preemption policy, reproducibly."""
+    measure queueing + preemption policy, reproducibly.  Percentiles come
+    from the registry histograms (the ttft family is labeled by priority
+    class, so the hi-priority split is one child read)."""
     rng = np.random.default_rng(11)
     gaps = rng.exponential(OVL_MEAN_IARRIVAL, size=OVL_REQUESTS)
     gaps[OVL_BURST[0]:OVL_BURST[1]] /= 4.0          # burst window
@@ -114,15 +129,14 @@ def _overload_run(cfg, model, params, kern, *, preemption: bool) -> dict:
                         num_pages=OVL_NUM_PAGES, clock=clk,
                         max_queued=OVL_MAX_QUEUED,
                         default_queue_timeout_s=OVL_QUEUE_TIMEOUT_S,
-                        preemption=preemption)
+                        preemption=preemption, tracer=tracer)
     eng = Engine(model, params, conf)
-    outs, prio_of, nxt, steps = [], {}, 0, 0
+    outs, nxt, steps = [], 0, 0
     while (nxt < OVL_REQUESTS or not eng.sched.idle) and steps < 500:
         while nxt < OVL_REQUESTS and arrivals[nxt] <= clk.now():
             try:
-                rid = eng.submit(prompts[nxt], max_new_tokens=OVL_MAX_NEW,
-                                 ignore_eos=True, priority=prios[nxt])
-                prio_of[rid] = prios[nxt]
+                eng.submit(prompts[nxt], max_new_tokens=OVL_MAX_NEW,
+                           ignore_eos=True, priority=prios[nxt])
             except QueueFullError:
                 pass                      # counted in stats.rejected_submits
             nxt += 1
@@ -130,8 +144,13 @@ def _overload_run(cfg, model, params, kern, *, preemption: bool) -> dict:
         eng._events.clear()
         clk.advance(OVL_STEP_DT)
         steps += 1
+    if tracer is not None:
+        tracer.flush_open(clk.now())
     served = [o for o in outs if o.finish_reason is not FinishReason.SHED]
-    hi = [o for o in served if prio_of.get(o.rid) == 1] or served
+    m = eng.metrics
+    # hi-priority ttft: the priority="1" histogram child (fall back to the
+    # aggregate when no hi request was ever served, as the list path did)
+    hi_h = m.ttft.labels(priority="1")
     s = eng.stats
     return {
         "section": "overload", "layout": "paged",
@@ -145,13 +164,15 @@ def _overload_run(cfg, model, params, kern, *, preemption: bool) -> dict:
         "offloaded_pages": s.offloaded_pages,
         "offloaded_bytes": s.offloaded_bytes,
         "restored_pages": s.restored_pages,
-        "ttft_s": _pct([o.ttft for o in served]),
-        "ttft_hi_s": _pct([o.ttft for o in hi]),
-        "latency_s": _pct([o.latency for o in served]),
+        "ttft_s": _hist_pct(m.ttft),
+        "ttft_hi_s": _hist_pct(hi_h if hi_h.count else m.ttft),
+        "latency_s": _hist_pct(m.request_latency),
+        "queue_wait_s": _hist_pct(m.queue_wait),
+        "metrics": m.registry.snapshot(),
     }
 
 
-def run():
+def run(trace_out: str | None = None):
     cfg = smoke_config("qwen3_4b")
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
@@ -255,7 +276,11 @@ def run():
     # which is exactly the p99-TTFT-for-priority-traffic trade the paper's
     # serving stack makes under saturation
     for preemption in (False, True):
-        rec = _overload_run(cfg, model, qparams, kern, preemption=preemption)
+        # trace the preemption run: its offload/restore/preempt spans are
+        # the interesting Perfetto timeline (ManualClock -> deterministic)
+        tracer = Tracer() if (trace_out and preemption) else None
+        rec = _overload_run(cfg, model, qparams, kern, preemption=preemption,
+                            tracer=tracer)
         records.append(rec)
         tag = "preempt" if preemption else "fifo"
         lines.append(
@@ -266,6 +291,10 @@ def run():
             f"rejected={rec['rejected_submits']}|"
             f"preemptions={rec['preemptions']}|"
             f"restored_pages={rec['restored_pages']}")
+        if tracer is not None:
+            tracer.export(trace_out)
+            lines.append(f"serving/trace,0,written={os.path.abspath(trace_out)}"
+                         f"|events={len(tracer.events)}")
 
     try:
         with open(JSON_PATH, "w") as f:

@@ -12,8 +12,11 @@ Prints ``name,us_per_call,derived`` CSV lines.
   roofline  : roofline_table    (dry-run derived roofline per cell)
 
 ``--sections kernels,roofline`` runs a subset (default: all).
+``--trace-out trace.json`` is forwarded to sections that accept it (today:
+serving — exports a Perfetto trace of the preemption overload run).
 """
 import argparse
+import inspect
 import sys
 import traceback
 
@@ -24,6 +27,9 @@ def main() -> None:
                     help="comma-separated subset of "
                          "kernels,paper_figs,accuracy,serving,roofline "
                          "(default all)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace_event JSON from "
+                         "sections that support tracing (serving)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -45,7 +51,11 @@ def main() -> None:
     failed = 0
     for name, fn in sections:
         try:
-            for line in fn():
+            kwargs = {}
+            if (args.trace_out
+                    and "trace_out" in inspect.signature(fn).parameters):
+                kwargs["trace_out"] = args.trace_out
+            for line in fn(**kwargs):
                 print(line, flush=True)
         except Exception as e:
             failed += 1

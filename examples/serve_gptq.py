@@ -3,6 +3,24 @@ continuous batching — the paper's vLLM workload in miniature — and compare
 kernel strategies end to end.
 
   PYTHONPATH=src python examples/serve_gptq.py [--requests 10] [--arch qwen3_4b]
+
+To run the same engine as an HTTP service and scrape it (DESIGN.md §15):
+
+  # terminal 1: OpenAI-style server + observability surface
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3_4b --smoke \
+      --serve --port 8000 --stall-timeout 30 --trace-out trace.json
+
+  # terminal 2: a completion, then a Prometheus scrape and a health probe
+  curl -s localhost:8000/v1/completions -d \
+      '{"prompt": [2, 3, 4, 5], "max_tokens": 8, "temperature": 0.0}'
+  curl -s localhost:8000/metrics    # text exposition: engine_*_total,
+                                    # engine_ttft_seconds buckets, ...
+  curl -s localhost:8000/healthz    # {"status": "ok", "watchdog": "armed",
+                                    #  "heartbeat_stale_s": ...}
+
+On shutdown (Ctrl-C) the server writes ``trace.json`` — open it at
+https://ui.perfetto.dev to see per-request lifecycle spans and engine
+step spans.
 """
 import argparse
 import time

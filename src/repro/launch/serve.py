@@ -6,12 +6,33 @@ expose it as an OpenAI-style HTTP service (``--serve``).
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_4b --smoke \
       --requests 8 --strategy opt4gptq [--no-pallas] [--cache paged]
 
-  # HTTP service: POST /v1/completions (token-id prompts, SSE streaming)
+  # HTTP service: POST /v1/completions (token-id prompts, SSE streaming),
+  # GET /metrics (Prometheus text) and GET /healthz (watchdog freshness)
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_4b --smoke \
       --serve --port 8000
+
+Observability (DESIGN.md §15): ``--trace-out trace.json`` attaches a
+step-span ``Tracer`` and writes a Chrome/Perfetto ``trace_event`` file on
+exit; ``--log-json`` switches the driver's own progress lines to one JSON
+object per line (machine-parseable event log); ``--no-metrics`` swaps the
+engine's registry for the zero-cost null one.
 """
 import argparse
+import json
+import sys
 import time
+
+
+def log_event(args, event: str, **fields):
+    """One structured driver event: human line by default, one JSON object
+    per line under ``--log-json`` (``{"event": ..., **fields}``)."""
+    if getattr(args, "log_json", False):
+        print(json.dumps({"event": event, **fields}, sort_keys=True),
+              flush=True)
+    else:
+        kv = " ".join(f"{k}={v}" for k, v in fields.items())
+        print(f"[serve] {event}: {kv}" if kv else f"[serve] {event}",
+              flush=True)
 
 
 def build_engine(args):
@@ -25,6 +46,7 @@ def build_engine(args):
     from repro.models import build_model, layers as L
     from repro.serving.api import EngineConfig
     from repro.serving.engine import Engine
+    from repro.serving.tracing import Tracer
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
@@ -33,12 +55,24 @@ def build_engine(args):
     kern = L.KernelConfig(strategy=get_strategy(args.strategy),
                           use_pallas=not args.no_pallas,
                           block_sizes=(8, 64, 64))
+    tracer = Tracer() if args.trace_out else None
     eng = Engine(model, qparams, EngineConfig(
         batch_slots=args.slots, max_len=args.max_len, kernels=kern,
         eos_id=-1, cache=args.cache, page_size=args.page_size,
         kv_quant=args.kv_quant, max_queued=args.max_queued,
-        default_queue_timeout_s=args.queue_timeout))
+        default_queue_timeout_s=args.queue_timeout,
+        metrics=not args.no_metrics, tracer=tracer))
     return cfg, eng
+
+
+def export_trace(args, eng):
+    """Flush still-open request spans and write the Perfetto trace file."""
+    if eng.tracer is None:
+        return
+    eng.tracer.flush_open(eng.clock.now())
+    path = eng.tracer.export(args.trace_out)
+    log_event(args, "trace_exported", path=path,
+              events=len(eng.tracer.events))
 
 
 def run_offline(args, cfg, eng):
@@ -54,13 +88,25 @@ def run_offline(args, cfg, eng):
     dt = time.time() - t0
     toks = sum(len(f.output) for f in done)
     lat = sorted(f.latency for f in done)
-    extra = ""
-    if args.cache == "paged":
-        extra = (f", prefix-hit pages {eng.stats.prefix_hit_pages}"
-                 f" ({eng.stats.prefix_hit_tokens} tokens)")
-    print(f"[serve] {cfg.name} x {args.strategy} [{args.cache}]: "
-          f"{len(done)} reqs, {toks} tokens, {toks / dt:.2f} tok/s "
-          f"(interpret), p50 {lat[len(lat) // 2]:.2f}s{extra}")
+    s = eng.stats
+    if args.log_json:
+        log_event(args, "offline_done", arch=cfg.name,
+                  strategy=args.strategy, cache=args.cache,
+                  requests=len(done), tokens=toks,
+                  tok_per_s=round(toks / dt, 2),
+                  p50_latency_s=round(lat[len(lat) // 2], 4),
+                  wall_s=round(s.wall_s, 4), steps=s.steps,
+                  prefix_hit_pages=s.prefix_hit_pages,
+                  prefix_hit_tokens=s.prefix_hit_tokens)
+    else:
+        extra = ""
+        if args.cache == "paged":
+            extra = (f", prefix-hit pages {s.prefix_hit_pages}"
+                     f" ({s.prefix_hit_tokens} tokens)")
+        print(f"[serve] {cfg.name} x {args.strategy} [{args.cache}]: "
+              f"{len(done)} reqs, {toks} tokens, {toks / dt:.2f} tok/s "
+              f"(interpret), p50 {lat[len(lat) // 2]:.2f}s{extra}")
+    export_trace(args, eng)
 
 
 def run_http(args, cfg, eng):
@@ -69,16 +115,23 @@ def run_http(args, cfg, eng):
     server = make_server(eng, host=args.host, port=args.port,
                          model_name=cfg.name,
                          stall_timeout_s=args.stall_timeout)
-    print(f"[serve] {cfg.name} [{args.cache}] listening on "
-          f"http://{args.host}:{server.port}/v1/completions "
-          f"(SSE with \"stream\": true; prompts are token-id lists)",
-          flush=True)
+    log_event(args, "listening", arch=cfg.name, cache=args.cache,
+              url=f"http://{args.host}:{server.port}/v1/completions",
+              metrics=f"http://{args.host}:{server.port}/metrics",
+              healthz=f"http://{args.host}:{server.port}/healthz")
     try:
         server.serve_forever()
     except KeyboardInterrupt:
         pass
     finally:
-        server.shutdown()
+        # a second Ctrl-C during shutdown (worker join) must not lose the
+        # trace — export runs no matter how shutdown ends
+        try:
+            server.shutdown()
+        except KeyboardInterrupt:
+            pass
+        finally:
+            export_trace(args, eng)
 
 
 def main(argv=None):
@@ -114,6 +167,16 @@ def main(argv=None):
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8000,
                     help="HTTP port for --serve (0 = ephemeral)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record per-request/step spans and write a "
+                         "Chrome/Perfetto trace_event JSON file on exit "
+                         "(DESIGN.md §15)")
+    ap.add_argument("--log-json", action="store_true",
+                    help="emit driver progress as one JSON object per line "
+                         "instead of human-readable text")
+    ap.add_argument("--no-metrics", action="store_true",
+                    help="disable the metrics registry (NullRegistry: "
+                         "/metrics exposes nothing, EngineStats reads zero)")
     args = ap.parse_args(argv)
 
     cfg, eng = build_engine(args)
@@ -121,7 +184,8 @@ def main(argv=None):
         run_http(args, cfg, eng)
     else:
         run_offline(args, cfg, eng)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -108,6 +108,13 @@ class EngineConfig:
     # serving fault injector (serving/faults.py::FaultInjector) consulted
     # at the top of every Engine.step(); None in production
     faults: object = None
+    # ---- observability (DESIGN.md §15) ----
+    # metrics=False swaps the engine's registry for the no-op NullRegistry
+    # (the zero-cost opt-out); EngineStats then reads all-zero
+    metrics: bool = True
+    # step-span tracer (serving/tracing.py::Tracer) recording per-request
+    # lifecycle + per-step spans for Perfetto export; None = tracing off
+    tracer: object = None
 
     def __post_init__(self):
         if self.batch_slots <= 0:

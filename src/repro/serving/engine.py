@@ -59,7 +59,6 @@ transfer happens per decode step — the (B,) sampled-token vector.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 import warnings
 from typing import Iterator, Optional, Sequence
@@ -74,35 +73,101 @@ from repro.serving import kv_cache as KV
 from repro.serving import kv_quant as KQ
 from repro.serving.api import (EngineConfig, FinishReason, QueueFullError,
                                RequestOutput, RequestState, StreamEvent)
+from repro.serving.metrics import EngineMetrics, make_engine_metrics
 from repro.serving.sampler import SamplingParams, sample, sample_batched
 from repro.serving.scheduler import Active, Request, Scheduler, bucket_len
 
 
-@dataclasses.dataclass
 class EngineStats:
-    tokens_generated: int = 0
-    prefill_tokens: int = 0
-    steps: int = 0
-    wall_s: float = 0.0
+    """Read-view over the engine's metrics registry (DESIGN.md §15).
+
+    The attribute surface predates the registry (ad-hoc dataclass counting)
+    and is kept verbatim so existing callers and the BENCH_serving.json
+    schema don't move; every value now reads straight out of the same
+    counters ``GET /metrics`` exposes — the two can never disagree.  With
+    ``EngineConfig(metrics=False)`` all values read 0.
+    """
+
+    def __init__(self, metrics: EngineMetrics):
+        self._m = metrics
+
+    # counters ---------------------------------------------------------------
+    @property
+    def tokens_generated(self) -> int:
+        return int(self._m.tokens_generated.value)
+
+    @property
+    def prefill_tokens(self) -> int:
+        return int(self._m.prefill_tokens.value)
+
+    @property
+    def steps(self) -> int:
+        return int(self._m.steps.value)
+
+    @property
+    def wall_s(self) -> float:
+        """Clock seconds spent inside ``Engine.step`` (the injectable
+        clock) — accumulated per step, so direct ``step()`` pumps (the HTTP
+        worker, the overload bench) are accounted exactly like ``run()``."""
+        return float(self._m.wall_seconds.value)
+
     # paged layout: pages/tokens served from the hashed-prefix cache instead
     # of being re-prefilled
-    prefix_hit_pages: int = 0
-    prefix_hit_tokens: int = 0
+    @property
+    def prefix_hit_pages(self) -> int:
+        return int(self._m.prefix_hit_pages.value)
+
+    @property
+    def prefix_hit_tokens(self) -> int:
+        return int(self._m.prefix_hit_tokens.value)
+
     # deepest concurrent batch ever admitted — the number int8 KV moves by
     # widening the page pool under a fixed byte budget (DESIGN.md §12)
-    peak_active: int = 0
+    @property
+    def peak_active(self) -> int:
+        return int(self._m.peak_active.value)
+
     # ---- overload resilience (DESIGN.md §14) ----
-    preemptions: int = 0         # victims evicted for higher-priority admits
-    offloaded_pages: int = 0     # pages checkpointed to host memory
-    offloaded_bytes: int = 0     # host bytes those checkpoints held
-    restored_pages: int = 0      # checkpointed pages scattered back on-device
-    rejected_submits: int = 0    # submit() refused at max_queued (HTTP 429)
-    deferred_admissions: int = 0  # head-of-queue could not reserve this step
-    shed_requests: int = 0       # queued past their deadline (HTTP 503)
+    @property
+    def preemptions(self) -> int:
+        return int(self._m.preemptions.value)
+
+    @property
+    def offloaded_pages(self) -> int:
+        return int(self._m.offloaded_pages.value)
+
+    @property
+    def offloaded_bytes(self) -> int:
+        return int(self._m.offloaded_bytes.value)
+
+    @property
+    def restored_pages(self) -> int:
+        return int(self._m.restored_pages.value)
+
+    @property
+    def rejected_submits(self) -> int:
+        return int(self._m.rejected_submits.value)
+
+    @property
+    def deferred_admissions(self) -> int:
+        return int(self._m.deferred_admissions.value)
+
+    @property
+    def shed_requests(self) -> int:
+        return int(self._m.shed_requests.value)
 
     @property
     def decode_throughput(self) -> float:
         return self.tokens_generated / self.wall_s if self.wall_s else 0.0
+
+    def __repr__(self) -> str:
+        fields = ("tokens_generated", "prefill_tokens", "steps", "wall_s",
+                  "prefix_hit_pages", "prefix_hit_tokens", "peak_active",
+                  "preemptions", "offloaded_pages", "offloaded_bytes",
+                  "restored_pages", "rejected_submits",
+                  "deferred_admissions", "shed_requests")
+        inner = ", ".join(f"{f}={getattr(self, f)!r}" for f in fields)
+        return f"EngineStats({inner})"
 
 
 _UNSET = object()
@@ -139,10 +204,11 @@ class Engine:
         self.eos_id = config.eos_id
         self.sched = Scheduler()
         self.rng = jax.random.key(config.seed)
-        self.stats = EngineStats()
         self.clock = config.clock if config.clock is not None \
             else CLK.SYSTEM_CLOCK
         self.faults = config.faults
+        self.tracer = config.tracer
+        self._step_no = 0
         self._next_rid = 0
         self._requests: dict[int, Request] = {}
         self._events: list[StreamEvent] = []
@@ -173,6 +239,16 @@ class Engine:
         if config.page_pool_bytes is not None and self.layout != "paged":
             raise ValueError(
                 "page_pool_bytes applies to the paged cache layout only")
+
+        # observability (DESIGN.md §15): one registry per engine, stamped
+        # with the cache layout + kv-quant mode as constant labels;
+        # EngineStats is a thin read-view over the same counters /metrics
+        # exposes, so the two can never disagree
+        kv_mode = kvq.dtype if kvq is not None \
+            else jnp.dtype(cache_dtype).name
+        self.metrics = make_engine_metrics(self.layout, kv_mode,
+                                           enabled=config.metrics)
+        self.stats = EngineStats(self.metrics)
 
         if self.layout == "paged":
             cfg = model.cfg
@@ -332,7 +408,7 @@ class Engine:
         sampling.validate(self.model.cfg.vocab_size)
         mq = self.config.max_queued
         if mq is not None and len(self.sched.waiting) >= mq:
-            self.stats.rejected_submits += 1
+            self.metrics.rejected_submits.inc()
             # crude Retry-After: one in-flight generation's worth of steps
             per_step = (self.stats.wall_s / self.stats.steps
                         if self.stats.steps else 0.1)
@@ -367,6 +443,11 @@ class Engine:
                                       if timeout is not None else None))
         self._requests[rid] = req
         self.sched.submit(req)
+        if self.tracer is not None:
+            self.tracer.request_state(rid, "QUEUED", now,
+                                      prompt_len=len(tokens),
+                                      max_new_tokens=max_new_tokens,
+                                      priority=priority)
         return rid
 
     def state_of(self, rid: int) -> RequestState:
@@ -394,6 +475,10 @@ class Engine:
                 output=list(req.saved_output),
                 arrival=req.arrival, t_first_token=req.saved_t_first,
                 t_done=self.clock.now(), finish_reason=FinishReason.ABORT)
+            self.metrics.requests_finished.labels(reason="abort").inc()
+            if self.tracer is not None:
+                self.tracer.request_end(rid, "abort", out.t_done,
+                                        tokens=len(out.output))
             self._events.append(StreamEvent(
                 rid=rid, token=None, index=len(out.output),
                 finish_reason=FinishReason.ABORT, output=out))
@@ -445,7 +530,11 @@ class Engine:
                 rid=req.rid, prompt_len=len(req.tokens), output=[],
                 arrival=req.arrival, t_first_token=0.0, t_done=now,
                 finish_reason=FinishReason.SHED)
-            self.stats.shed_requests += 1
+            self.metrics.shed_requests.inc()
+            self.metrics.requests_finished.labels(reason="shed").inc()
+            if self.tracer is not None:
+                self.tracer.request_end(req.rid, "shed", now,
+                                        queued_s=now - req.arrival)
             finished.append(out)
             self._events.append(StreamEvent(
                 rid=req.rid, token=None, index=0,
@@ -463,12 +552,18 @@ class Engine:
             slot = self.slots.alloc()
             assert slot is not None
             a = self.sched.activate(req, slot)
+            t_admit = self.clock.now()
+            self.metrics.queue_wait.observe(t_admit - req.arrival)
             # bucketed prefill on the slot's cache slice. Recurrent state
             # (SSM) and ring caches (SWA) are polluted by padded tokens ->
             # exact-length prefill for those families (one compile per length)
             cfg = self.model.cfg
             paddable = cfg.family not in ("ssm", "hybrid") and not cfg.sliding_window
             blen = bucket_len(len(req.tokens)) if paddable else len(req.tokens)
+            if self.tracer is not None:
+                self.tracer.request_state(req.rid, "PREFILL", t_admit,
+                                          prompt_len=len(req.tokens),
+                                          prefill_chunk=blen, slot=slot)
             toks = np.zeros((1, blen), np.int32)
             toks[0, :len(req.tokens)] = req.tokens
             slot_idx = jnp.asarray(slot, jnp.int32)
@@ -481,11 +576,19 @@ class Engine:
             self.slots.cache = self._write_slot(self.slots.cache, sub_cache,
                                                 slot_idx)
             self.slots.seq_lens = self.slots.seq_lens.at[slot].set(sub_lens[0])
-            self.stats.prefill_tokens += len(req.tokens)
+            self.metrics.prefill_tokens.inc(len(req.tokens))
             tok = self._sample_first(logits, req)
             a.t_first_token = self.clock.now()
+            self.metrics.ttft.labels(priority=req.priority).observe(
+                a.t_first_token - req.arrival)
             a.output.append(tok)
             req.state = RequestState.RUNNING
+            if self.tracer is not None:
+                self.tracer.prefill_span(req.rid, t_admit, a.t_first_token,
+                                         prefill_chunk=blen,
+                                         prefill_tokens=len(req.tokens))
+                self.tracer.request_state(req.rid, "RUNNING",
+                                          a.t_first_token)
             self._emit_token(a, slot, tok, finished)
 
     # --------------------------------------------- paged admission/preemption
@@ -526,9 +629,17 @@ class Engine:
         req.saved_t_first = a.t_first_token
         req.state = RequestState.PREEMPTED
         self.sched.requeue(req)
-        self.stats.preemptions += 1
-        self.stats.offloaded_pages += rec.n_payload_pages
-        self.stats.offloaded_bytes += rec.nbytes
+        m = self.metrics
+        m.preemptions.inc()
+        m.offloaded_pages.inc(rec.n_payload_pages)
+        m.offloaded_bytes.inc(rec.nbytes)
+        if self.tracer is not None:
+            now = self.clock.now()
+            self.tracer.request_instant(
+                req.rid, "offload", now, pages=rec.n_payload_pages,
+                shared_pages=rec.shared_pages, bytes=rec.nbytes)
+            self.tracer.request_state(req.rid, "PREEMPTED", now,
+                                      offloaded_pages=rec.n_payload_pages)
         return True
 
     def _try_reserve(self, req: Request) -> bool:
@@ -568,7 +679,7 @@ class Engine:
                and self._preempt_victim(req.priority)):
             ok = self._try_reserve(req)
         if not ok:
-            self.stats.deferred_admissions += 1
+            self.metrics.deferred_admissions.inc()
         return ok
 
     def _resume_restored(self, req: Request, a: Active, row: int,
@@ -587,8 +698,10 @@ class Engine:
         req.saved_output = []
         gap_start = info.hit_pages * pc.page_size
         gap_end = info.snap_start_page * pc.page_size
+        gap_tokens = 0
         if gap_start < gap_end:
             gap = ctx[gap_start:gap_end]
+            gap_tokens = len(gap)
             blen = bucket_len(len(gap))
             toks = np.zeros((1, blen), np.int32)
             toks[0, :len(gap)] = gap
@@ -596,19 +709,28 @@ class Engine:
             _, self.cache, _ = self._prefill_paged(
                 self.params, jnp.asarray(toks), len(gap), self.cache,
                 seq_start, pc.block_tables[row][None])
-            self.stats.prefill_tokens += len(gap)
+            self.metrics.prefill_tokens.inc(len(gap))
         pc.seq_lens = pc.seq_lens.at[row].set(info.length)
         pc.register_prefix(req.rid, ctx)
-        self.stats.restored_pages += info.restored_pages
-        self.stats.prefix_hit_pages += info.hit_pages
-        self.stats.prefix_hit_tokens += gap_start
+        m = self.metrics
+        m.restored_pages.inc(info.restored_pages)
+        m.prefix_hit_pages.inc(info.hit_pages)
+        m.prefix_hit_tokens.inc(gap_start)
         req.state = RequestState.RUNNING
+        if self.tracer is not None:
+            now = self.clock.now()
+            self.tracer.request_instant(
+                req.rid, "restore", now, restored_pages=info.restored_pages,
+                hit_pages=info.hit_pages, gap_recompute_tokens=gap_tokens)
+            self.tracer.request_state(req.rid, "RUNNING", now, restored=True)
 
     def _admit_paged(self, finished: list[RequestOutput]):
         pc = self.pc
         for req in self.sched.admit(self._reserve_paged):
             row = pc.row_of(req.rid)
             a = self.sched.activate(req, row)
+            t_admit = self.clock.now()
+            self.metrics.queue_wait.observe(t_admit - req.arrival)
             info = self._pending_restores.pop(req.rid, None)
             if info is not None:
                 # preemption restore: pages are back (host scatter + prefix
@@ -632,6 +754,11 @@ class Engine:
             suffix = req.tokens[hit_tokens:]
             # bucketed suffix prefill against the reused prefix pages
             blen = bucket_len(len(suffix))
+            if self.tracer is not None:
+                self.tracer.request_state(
+                    req.rid, "PREFILL", t_admit, prompt_len=len(req.tokens),
+                    prefill_chunk=blen, prefix_hit_pages=hit_pages,
+                    pages_reserved=len(pc.tables[req.rid]), row=row)
             toks = np.zeros((1, blen), np.int32)
             toks[0, :len(suffix)] = suffix
             row_bt = self.pc.block_tables[row][None]
@@ -640,13 +767,23 @@ class Engine:
                 self.params, jnp.asarray(toks), len(suffix), self.cache,
                 seq_start, row_bt)
             pc.seq_lens = pc.seq_lens.at[row].set(new_lens[0])
-            self.stats.prefill_tokens += len(suffix)
-            self.stats.prefix_hit_pages += hit_pages
-            self.stats.prefix_hit_tokens += hit_tokens
+            m = self.metrics
+            m.prefill_tokens.inc(len(suffix))
+            m.prefix_hit_pages.inc(hit_pages)
+            m.prefix_hit_tokens.inc(hit_tokens)
             tok = self._sample_first(logits, req)
             a.t_first_token = self.clock.now()
+            m.ttft.labels(priority=req.priority).observe(
+                a.t_first_token - req.arrival)
             a.output.append(tok)
             req.state = RequestState.RUNNING
+            if self.tracer is not None:
+                self.tracer.prefill_span(
+                    req.rid, t_admit, a.t_first_token, prefill_chunk=blen,
+                    prefill_tokens=len(suffix), prefix_hit_pages=hit_pages,
+                    pages_reserved=len(pc.tables[req.rid]))
+                self.tracer.request_state(req.rid, "RUNNING",
+                                          a.t_first_token)
             self._emit_token(a, row, tok, finished)
 
     def _finish(self, row: int, finished: list[RequestOutput],
@@ -662,6 +799,15 @@ class Engine:
             rid=a.req.rid, prompt_len=len(a.req.tokens), output=a.output,
             arrival=a.req.arrival, t_first_token=a.t_first_token,
             t_done=self.clock.now(), finish_reason=reason)
+        m = self.metrics
+        m.requests_finished.labels(reason=reason.value).inc()
+        if out.t_first_token:
+            m.request_latency.observe(out.latency)
+        if out.tpot > 0.0:
+            m.tpot.observe(out.tpot)
+        if self.tracer is not None:
+            self.tracer.request_end(out.rid, reason.value, out.t_done,
+                                    tokens=len(out.output))
         finished.append(out)
         return out
 
@@ -670,7 +816,13 @@ class Engine:
     _MAX_PENDING_EVENTS = 65_536
 
     def step(self) -> list[RequestOutput]:
-        """One engine iteration: admissions + one fused decode+sample step."""
+        """One engine iteration: admissions + one fused decode+sample step.
+
+        Wall-clock accounting happens *here* (one clock read at entry, one
+        at exit) so every pump — ``run``/``generate``/``stream`` wrappers,
+        the HTTP worker thread, or a bare ``while: eng.step()`` loop —
+        accounts identically into ``engine_wall_seconds_total``."""
+        t_step0 = self.clock.now()
         if self.faults is not None:
             # deterministic fault injection (serving/faults.py): scheduled
             # page seizures, stalls and aborts fire before admissions
@@ -679,9 +831,9 @@ class Engine:
             del self._events[:len(self._events) - self._MAX_PENDING_EVENTS]
         finished: list[RequestOutput] = []
         self._admit(finished)
-        self.stats.peak_active = max(self.stats.peak_active,
-                                     len(self.sched.active))
+        self.metrics.peak_active.set_max(len(self.sched.active))
         if not self.sched.active:
+            self._end_step(t_step0, finished, decoded=0)
             return finished
         # host-side staging: last tokens + per-row sampling arrays (numpy,
         # no device round-trips)
@@ -724,14 +876,40 @@ class Engine:
                 all_greedy=all_greedy)
         # the single device->host transfer of the decode loop
         toks = jax.device_get(toks_dev).tolist()
-        self.stats.tokens_generated += int(live.sum())
-        self.stats.steps += 1
+        decoded = int(live.sum())
+        self.metrics.tokens_generated.inc(decoded)
+        self.metrics.steps.inc()
         for s in sorted(self.sched.active):
             a = self.sched.active[s]
             tok = toks[s]
             a.output.append(tok)
             self._emit_token(a, s, tok, finished)
+        self._end_step(t_step0, finished, decoded=decoded)
         return finished
+
+    def _end_step(self, t0: float, finished: list[RequestOutput],
+                  decoded: int) -> None:
+        """Close out one ``step()``: wall/duration accounting, occupancy
+        gauges, and the step's trace span.  Host-side bookkeeping only —
+        nothing here touches a device value."""
+        t1 = self.clock.now()
+        m = self.metrics
+        m.wall_seconds.inc(t1 - t0)
+        m.step_duration.observe(t1 - t0)
+        m.active_requests.set(len(self.sched.active))
+        m.waiting_requests.set(len(self.sched.waiting))
+        if self.layout == "paged":
+            m.sync_pool(self.pc)
+        if self.tracer is not None:
+            args = {"step": self._step_no, "batch": len(self.sched.active),
+                    "waiting": len(self.sched.waiting), "decoded": decoded,
+                    "finished": len(finished)}
+            if self.layout == "paged":
+                occ = self.pc.occupancy()
+                args["free_pages"] = occ["free_pages"]
+                args["pool_utilization"] = round(occ["utilization"], 6)
+            self.tracer.step_span(t0, t1, **args)
+        self._step_no += 1
 
     def drain_events(self) -> list[StreamEvent]:
         """Take ownership of the pending ``StreamEvent``s (per-token events
@@ -747,15 +925,16 @@ class Engine:
         return self.drain_events()
 
     def run(self, *, max_steps: int = 10_000) -> list[RequestOutput]:
-        """Drain the queue; returns finished requests with latency stats."""
-        t0 = self.clock.now()
+        """Drain the queue; returns finished requests with latency stats.
+
+        Wall time is accounted inside ``step()`` — there is no extra
+        accounting here, so driving ``step()`` directly reads the same."""
         out: list[RequestOutput] = []
         steps = 0
         while not self.sched.idle and steps < max_steps:
             out.extend(self.step())
             self._events.clear()       # run() consumers read outputs, not events
             steps += 1
-        self.stats.wall_s += self.clock.now() - t0
         return out
 
     def generate(self, prompts, *, max_new_tokens: int = 32,
@@ -780,7 +959,6 @@ class Engine:
                 for p, sp in zip(prompts, samplings)]
         want = set(rids)
         outs: dict[int, RequestOutput] = {}
-        t0 = self.clock.now()
         steps = 0
         while want and not self.sched.idle and steps < max_steps:
             for out in self.step():
@@ -789,7 +967,6 @@ class Engine:
                     want.discard(out.rid)
             self._events.clear()
             steps += 1
-        self.stats.wall_s += self.clock.now() - t0
         return [outs[r] for r in rids if r in outs]
 
     def stream(self, *, max_steps: int = 10_000) -> Iterator[StreamEvent]:
@@ -798,13 +975,9 @@ class Engine:
         continuous batching preserved (new submissions made while iterating
         are admitted and interleaved).  Terminal events carry the request's
         ``RequestOutput``; aborts surface as terminal events too."""
-        t0 = self.clock.now()
         steps = 0
-        try:
-            while not self.sched.idle and steps < max_steps:
-                yield from self.step_events()
-                steps += 1
-            # e.g. an abort() that idled the engine mid-iteration
-            yield from self.drain_events()
-        finally:
-            self.stats.wall_s += self.clock.now() - t0
+        while not self.sched.idle and steps < max_steps:
+            yield from self.step_events()
+            steps += 1
+        # e.g. an abort() that idled the engine mid-iteration
+        yield from self.drain_events()

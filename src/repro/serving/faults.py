@@ -93,25 +93,41 @@ class FaultInjector:
     # ------------------------------------------------------------ engine hook
     def on_step(self, engine) -> None:
         """Called by ``Engine.step()`` before admissions; fires every fault
-        scheduled for the current step number."""
+        scheduled for the current step number.  Each fired fault is recorded
+        in ``self.log`` and surfaced to the engine's observability layer:
+        an ``engine_faults_injected_total{kind=...}`` increment and a trace
+        instant on the engine track (DESIGN.md §15)."""
         s = self.step_no
         self.step_no += 1
         for rid in self._aborts.pop(s, []):
             # the RequestOutput lands in the log (abort() returns it to its
             # caller, not through step()'s finished list)
             self.log.append((s, "abort", engine.abort(rid)))
+            self._observe(engine, "abort", rid=rid)
         n = self._exhaust.pop(s, None)
         if n is not None:
             got = self.seize_pages(engine.pc, n)
             self.log.append((s, "exhaust_pages", got))
+            self._observe(engine, "exhaust_pages", pages=got)
         if s in self._release_at:
             self._release_at.discard(s)
             got = self.release_seized(engine.pc)
             self.log.append((s, "release_pages", got))
+            self._observe(engine, "release_pages", pages=got)
         fn = self._stalls.pop(s, None)
         if fn is not None:
             fn()
             self.log.append((s, "stall", None))
+            self._observe(engine, "stall")
+
+    def _observe(self, engine, kind: str, **detail) -> None:
+        metrics = getattr(engine, "metrics", None)
+        if metrics is not None:
+            metrics.faults_injected.labels(kind=kind).inc()
+        tracer = getattr(engine, "tracer", None)
+        if tracer is not None:
+            tracer.fault_instant(kind, engine.clock.now(),
+                                 step=self.step_no - 1, **detail)
 
 
 def clock_stall(clock, dt: float) -> Callable[[], None]:

@@ -236,7 +236,7 @@ def _choice(ev_or_tokens, finish_reason=None) -> dict:
 
 
 class CompletionsHandler(BaseHTTPRequestHandler):
-    """``/v1/completions`` (+ ``/v1/models``, ``/healthz``)."""
+    """``/v1/completions`` (+ ``/v1/models``, ``/healthz``, ``/metrics``)."""
     protocol_version = "HTTP/1.1"
 
     def log_message(self, *args):            # keep benchmark/test output clean
@@ -259,12 +259,45 @@ class CompletionsHandler(BaseHTTPRequestHandler):
 
     def do_GET(self):
         if self.path == "/healthz":
-            self._json(200, {"status": "ok"})
+            self._healthz()
+        elif self.path == "/metrics":
+            self._metrics()
         elif self.path == "/v1/models":
             self._json(200, {"object": "list", "data": [
                 {"id": self.server.model_name, "object": "model"}]})
         else:
             self._json(404, {"error": {"message": f"no route {self.path}"}})
+
+    def _healthz(self):
+        """Liveness + worker-heartbeat freshness.  With the watchdog armed
+        (``stall_timeout_s``), a stale heartbeat turns this into a 503 so a
+        scraper/load-balancer sees the wedged engine the same way in-flight
+        clients do (DESIGN.md §15)."""
+        hb = self.worker.heartbeat
+        if hb is None:
+            self._json(200, {"status": "ok", "watchdog": "disarmed"})
+            return
+        healthy = hb.healthy
+        self._json(200 if healthy else 503, {
+            "status": "ok" if healthy else "stalled",
+            "watchdog": "armed",
+            "heartbeat_stale_s": round(hb.stale_s, 6),
+            "heartbeat_timeout_s": hb.timeout_s,
+            "missed": hb.missed,
+            "stalled_requests": self.worker.stalled_requests})
+
+    def _metrics(self):
+        """Prometheus text exposition (format 0.0.4) of the engine's
+        registry.  The snapshot is read without pausing the worker — every
+        sample is a plain float read, torn at worst by one step."""
+        text = self.worker.eng.metrics.registry.expose()
+        data = text.encode()
+        self.send_response(200)
+        self.send_header("Content-Type",
+                         "text/plain; version=0.0.4; charset=utf-8")
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
 
     def do_POST(self):
         if self.path != "/v1/completions":

@@ -207,6 +207,19 @@ class PagedCache:
     def utilization(self) -> float:
         return 1.0 - len(self.free_list) / self.num_pages
 
+    def occupancy(self) -> dict:
+        """Point-in-time pool occupancy for the observability layer
+        (DESIGN.md §15): page-pool gauges and step-span annotations read
+        this one snapshot instead of poking at internals."""
+        return {
+            "num_pages": self.num_pages,
+            "free_pages": len(self.free_list),
+            "utilization": self.utilization,
+            "live_seqs": len(self.tables),
+            "offloaded_seqs": len(self.offloaded),
+            "offloaded_bytes": self.offloaded_bytes,
+        }
+
     def row_of(self, seq_id: int) -> int:
         return self.rows[seq_id]
 

@@ -1,0 +1,243 @@
+"""Per-request step-span tracing with Chrome/Perfetto export (DESIGN.md §15).
+
+A ``Tracer`` attached via ``EngineConfig.tracer`` records two kinds of
+timeline, timestamped exclusively through the engine's injectable clock
+(``serving/clock.py`` — under a ``ManualClock`` the exported trace is
+byte-deterministic across runs):
+
+* **request lifecycle spans** on one Perfetto track per request
+  (pid ``PID_REQUESTS``, tid = rid): QUEUED → PREFILL → RUNNING →
+  PREEMPTED → RESTORED-RUNNING → terminal instant (``finish`` with the
+  ``FinishReason``).  Offload/restore page movement and injected faults
+  (``serving/faults.py``) land as instant events on the same tracks.
+* **engine step spans** on the engine track (pid ``PID_ENGINE``): one
+  ``X`` slice per ``Engine.step`` carrying batch size, queue depth, and
+  page-pool occupancy annotations; prefill slices carry the bucketed
+  chunk length and page-reservation annotations.
+
+Export is the Chrome ``trace_event`` JSON-object format (the one
+``about:tracing`` and https://ui.perfetto.dev load directly):
+``{"traceEvents": [...], "displayTimeUnit": "ms"}`` with ``ts``/``dur`` in
+microseconds, ``M`` metadata events naming every track, ``X`` complete
+slices and scoped ``i`` instants.  ``validate_trace`` is the schema check
+the tests and the CI artifact gate run over exported files.
+
+Tracing is pure host-side bookkeeping: no device value is ever read for a
+span (the engine's one device->host transfer per decode step is unchanged,
+and greedy outputs are bit-identical with tracing on or off — both tested).
+``Tracer(enabled=False)`` (or simply no tracer) is the opt-out; every
+record call short-circuits on one attribute check.
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+PID_ENGINE = 1
+PID_REQUESTS = 2
+TID_STEPS = 0
+
+# span/instant categories
+CAT_STEP = "engine"
+CAT_LIFECYCLE = "request"
+CAT_FAULT = "fault"
+
+_ALLOWED_PH = {"M", "X", "i"}
+
+
+def _us(t: float) -> float:
+    """Seconds -> integer-friendly microseconds (rounded to 0.1us so float
+    repr stays stable and the export byte-deterministic)."""
+    return round(float(t) * 1e6, 1)
+
+
+class Tracer:
+    """Collects trace events; one tracer serves one engine.
+
+    The engine hands every timestamp in explicitly (read from its
+    injectable clock) — the tracer itself never looks at a clock, which is
+    what makes ManualClock runs reproduce byte-identical traces.
+    """
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self.events: list[dict] = []
+        self._threads: dict[tuple[int, int], str] = {}
+        self._processes: dict[int, str] = {PID_ENGINE: "engine",
+                                           PID_REQUESTS: "requests"}
+        self._open: dict[int, tuple[str, float, dict]] = {}  # rid -> state
+        self._thread(PID_ENGINE, TID_STEPS, "steps")
+
+    # ------------------------------------------------------------- primitives
+    def _thread(self, pid: int, tid: int, name: str):
+        self._threads.setdefault((pid, tid), name)
+
+    def complete(self, name: str, cat: str, pid: int, tid: int,
+                 t0: float, t1: float, **args):
+        """One ``X`` slice [t0, t1] (seconds)."""
+        if not self.enabled:
+            return
+        self.events.append({
+            "name": name, "cat": cat, "ph": "X", "pid": pid, "tid": tid,
+            "ts": _us(t0), "dur": max(0.0, _us(t1) - _us(t0)),
+            "args": dict(args)})
+
+    def instant(self, name: str, cat: str, pid: int, tid: int, t: float,
+                **args):
+        if not self.enabled:
+            return
+        self.events.append({
+            "name": name, "cat": cat, "ph": "i", "s": "t",
+            "pid": pid, "tid": tid, "ts": _us(t), "args": dict(args)})
+
+    # ---------------------------------------------------------- engine hooks
+    def step_span(self, t0: float, t1: float, **args):
+        self.complete("step", CAT_STEP, PID_ENGINE, TID_STEPS, t0, t1,
+                      **args)
+
+    def prefill_span(self, rid: int, t0: float, t1: float, **args):
+        """Prefill work slice on the engine track (chunk/bucket + page
+        annotations) — the request's own PREFILL lifecycle span covers
+        queue-exit to first token on its request track."""
+        self.complete("prefill", CAT_STEP, PID_ENGINE, TID_STEPS, t0, t1,
+                      rid=rid, **args)
+
+    def request_state(self, rid: int, state: str, t: float, **args):
+        """Move a request's lifecycle track to ``state`` at time ``t``:
+        closes the previous state's span (if any) as an ``X`` slice and
+        opens the new one.  ``args`` attach to the span being *opened*."""
+        if not self.enabled:
+            return
+        self._thread(PID_REQUESTS, rid, f"req {rid}")
+        prev = self._open.pop(rid, None)
+        if prev is not None:
+            pstate, t0, pargs = prev
+            self.complete(pstate, CAT_LIFECYCLE, PID_REQUESTS, rid, t0, t,
+                          **pargs)
+        self._open[rid] = (state, t, dict(args))
+
+    def request_end(self, rid: int, reason: str, t: float, **args):
+        """Terminal transition: close the open span and drop an instant
+        (``finish``) carrying the ``FinishReason``."""
+        if not self.enabled:
+            return
+        self.request_state(rid, "_end", t)      # closes the open span
+        self._open.pop(rid, None)
+        self.instant("finish", CAT_LIFECYCLE, PID_REQUESTS, rid, t,
+                     reason=reason, **args)
+
+    def request_instant(self, rid: int, name: str, t: float, **args):
+        if not self.enabled:
+            return
+        self._thread(PID_REQUESTS, rid, f"req {rid}")
+        self.instant(name, CAT_LIFECYCLE, PID_REQUESTS, rid, t, **args)
+
+    def fault_instant(self, kind: str, t: float, **args):
+        """Injected faults (``serving/faults.py``) land on the engine track
+        so overload post-mortems line them up against step spans."""
+        self.instant(f"fault:{kind}", CAT_FAULT, PID_ENGINE, TID_STEPS, t,
+                     **args)
+
+    # ------------------------------------------------------------------ export
+    def flush_open(self, t: float):
+        """Close still-open lifecycle spans at ``t`` (end-of-run export of a
+        trace whose requests never finished)."""
+        for rid in sorted(self._open):
+            state, t0, args = self._open.pop(rid)
+            self.complete(state, CAT_LIFECYCLE, PID_REQUESTS, rid, t0, t,
+                          **args)
+
+    def to_dict(self) -> dict:
+        meta = [{"name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+                 "args": {"name": name}}
+                for pid, name in sorted(self._processes.items())]
+        meta += [{"name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
+                  "args": {"name": name}}
+                 for (pid, tid), name in sorted(self._threads.items())]
+        return {"displayTimeUnit": "ms", "traceEvents": meta + self.events}
+
+    def to_json(self) -> str:
+        """Canonical serialization: sorted keys, no whitespace — two runs
+        with the same ManualClock schedule serialize byte-identically."""
+        return json.dumps(self.to_dict(), sort_keys=True,
+                          separators=(",", ":"))
+
+    def export(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+        return path
+
+
+# ------------------------------------------------------------------ validation
+def validate_trace(obj) -> list[str]:
+    """Schema check for an exported trace (dict or JSON string).  Returns a
+    list of problems — empty means the trace is well-formed Chrome
+    ``trace_event`` JSON that Perfetto/about:tracing loads without
+    warnings: metadata names every referenced track, slices have
+    non-negative ``ts``/``dur``, instants carry a scope, args are
+    JSON-serializable."""
+    problems: list[str] = []
+    if isinstance(obj, (str, bytes)):
+        try:
+            obj = json.loads(obj)
+        except json.JSONDecodeError as e:
+            return [f"not valid JSON: {e}"]
+    if not isinstance(obj, dict) or "traceEvents" not in obj:
+        return ["top level must be an object with 'traceEvents'"]
+    events = obj["traceEvents"]
+    if not isinstance(events, list):
+        return ["'traceEvents' must be a list"]
+    named: set[tuple[int, int]] = set()
+    used: set[tuple[int, int]] = set()
+    for i, ev in enumerate(events):
+        where = f"event[{i}]"
+        if not isinstance(ev, dict):
+            problems.append(f"{where}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in _ALLOWED_PH:
+            problems.append(f"{where}: unknown phase {ph!r}")
+            continue
+        if not isinstance(ev.get("name"), str) or not ev["name"]:
+            problems.append(f"{where}: missing name")
+        if not isinstance(ev.get("pid"), int) \
+                or not isinstance(ev.get("tid"), int):
+            problems.append(f"{where}: pid/tid must be ints")
+            continue
+        key = (ev["pid"], ev["tid"])
+        if ph == "M":
+            if ev["name"] == "thread_name":
+                named.add(key)
+            if not isinstance(ev.get("args", {}).get("name"), str):
+                problems.append(f"{where}: metadata without args.name")
+            continue
+        used.add(key)
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            problems.append(f"{where}: bad ts {ts!r}")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                problems.append(f"{where}: X slice with bad dur {dur!r}")
+        if ph == "i" and ev.get("s") not in ("g", "p", "t"):
+            problems.append(f"{where}: instant without scope 's'")
+        args = ev.get("args", {})
+        if not isinstance(args, dict):
+            problems.append(f"{where}: args must be an object")
+        else:
+            try:
+                json.dumps(args)
+            except (TypeError, ValueError):
+                problems.append(f"{where}: args not JSON-serializable")
+    for key in sorted(used - named):
+        problems.append(f"track pid={key[0]} tid={key[1]} has events but no "
+                        f"thread_name metadata")
+    return problems
+
+
+def load_trace(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+NULL_TRACER: Optional[Tracer] = None   # the documented "tracing off" value

@@ -141,14 +141,22 @@ def test_serving_uses_injectable_clock():
     """Serving deadline/timestamp logic must be testable without sleeping:
     ``serving/clock.py::SystemClock`` is the single permitted ``time.time``
     call site; everything else in ``src/repro/serving/`` reads
-    ``engine.clock.now()`` (DESIGN.md §14)."""
+    ``engine.clock.now()`` (DESIGN.md §14).  The observability layer is
+    explicitly in scope (ISSUE 7): ``metrics.py`` observes values the
+    engine timestamps and ``tracing.py`` never reads a clock at all —
+    that's what makes ManualClock traces byte-deterministic."""
     serving = os.path.join(SRC, "repro", "serving")
     problems: list[str] = []
+    walked: set[str] = set()
     for dirpath, _dirs, files in os.walk(serving):
         for fn in files:
             if fn.endswith(".py") and fn != "clock.py":
+                walked.add(fn)
                 problems += _direct_time_calls(os.path.join(dirpath, fn))
     assert not problems, "\n".join(problems)
+    assert {"metrics.py", "tracing.py", "engine.py",
+            "http_api.py"} <= walked, (
+        f"observability modules fell out of the clock gate: {sorted(walked)}")
 
 
 def test_src_has_no_dead_imports():
