@@ -7,7 +7,11 @@ the *same page-pool byte budget*, recording the cache footprint, quant mode
 and the peak in-flight batch each mode sustains, plus (ISSUE 5) the paged
 prefill gather-vs-kernel comparison: ttft percentiles and the analytic peak
 prefill transient (``prefill_ttft_s`` / ``prefill_peak_bytes``) with the
-contiguous-gather prefill vs the fused chunked paged-prefill kernel.
+contiguous-gather prefill vs the fused chunked paged-prefill kernel, plus
+(ISSUE 8) the speculative-decoding on/off comparison: the n-gram speculator
+over a repetitive-suffix greedy workload, recording acceptance rate,
+accepted tokens per verify step, tokens per engine step and the tok/s +
+step-count ratios against plain decode (token-identical output required).
 
 Interpret-mode wall-clock on CPU: the numbers validate the serving harness
 and track the *relative* slot-vs-paged / bf16-vs-int8 trajectory across PRs,
@@ -42,6 +46,7 @@ from repro.serving.api import EngineConfig, FinishReason, QueueFullError
 from repro.serving.clock import ManualClock
 from repro.serving.engine import Engine
 from repro.serving.kv_quant import KVQuantConfig, page_bytes
+from repro.serving.spec_decode import SpecConfig
 from repro.serving.tracing import Tracer
 
 N_REQUESTS = 8
@@ -65,6 +70,13 @@ CAP_PROMPT_LEN = 28
 CAP_MAX_NEW = 4
 CAP_PAGE_SIZE = 16
 CAP_BUDGET_PAGES_BF16 = 4
+# speculative decoding experiment (ISSUE 8): repetitive-suffix prompts and a
+# long greedy horizon so the n-gram speculator's periodic extrapolation gets
+# full-k drafts accepted; k=8 with page_size=16 keeps every verify span
+# inside two pages
+SPEC_REQUESTS = 2
+SPEC_MAX_NEW = 96
+SPEC_K = 8
 JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                          os.pardir, "BENCH_serving.json")
 
@@ -87,6 +99,12 @@ def _run_engine(model, params, conf, prompts, max_new):
     rec = {
         "requests": len(outs), "tokens": toks, "wall_s": dt,
         "tok_per_s_interpret": toks / dt if dt else 0.0,
+        # emitted tokens per engine step — batch concurrency for plain
+        # decode, higher when a speculative verify step lands multiple
+        # tokens per row (ISSUE 8); tpot_s below is already per *emitted
+        # token* so the two never conflate
+        "tokens_per_step": toks / max(1, eng.stats.steps),
+        "steps": eng.stats.steps,
         "ttft_s": _hist_pct(m.ttft),
         "tpot_s": _hist_pct(m.tpot),
         "latency_s": _hist_pct(m.request_latency),
@@ -295,6 +313,62 @@ def run(trace_out: str | None = None):
             tracer.export(trace_out)
             lines.append(f"serving/trace,0,written={os.path.abspath(trace_out)}"
                          f"|events={len(tracer.events)}")
+
+    # ---- speculative decoding: n-gram spec on/off (ISSUE 8) ----
+    # same repetitive-suffix greedy workload twice; the spec run must emit
+    # token-identical output in fewer engine steps, with > 1 accepted draft
+    # token per verify step.  Both runs score through the pure-JAX dequant
+    # path (kernels=None): the verify pass batches K+1 positions through the
+    # matmul lane while plain decode uses the single-token GEMV lane, and
+    # under the Pallas GPTQ kernels those two accumulate in different orders
+    # (~1e-7 on fp32 logits) — enough to flip near-tied argmaxes on the
+    # smoke model, which would turn an exact-identity check into a flaky one.
+    rng = np.random.default_rng(0)
+    spec_prompts = []
+    for _ in range(SPEC_REQUESTS):
+        pat = rng.integers(2, cfg.vocab_size, size=4).tolist()
+        spec_prompts.append(
+            rng.integers(2, cfg.vocab_size, size=4).tolist() + pat * 3)
+    spec_base = None
+    for spec in (None, SpecConfig(method="ngram", k=SPEC_K)):
+        conf = EngineConfig(batch_slots=SPEC_REQUESTS, max_len=256,
+                            eos_id=-1, cache="paged", page_size=16,
+                            num_pages=64, speculation=spec)
+        eng, outs, rec = _run_engine(model, qparams, conf, spec_prompts,
+                                     SPEC_MAX_NEW)
+        s = eng.stats
+        rec = {"section": "spec_decode", "layout": "paged",
+               "speculate": "ngram" if spec else "off",
+               "spec_k": SPEC_K if spec else 0,
+               "spec_proposed": s.spec_proposed,
+               "spec_accepted": s.spec_accepted,
+               "spec_verify_steps": s.spec_verify_steps,
+               "acceptance_rate": (s.spec_accepted / s.spec_proposed
+                                   if s.spec_proposed else 0.0),
+               "accepted_per_verify_step": (
+                   s.spec_accepted / s.spec_verify_steps
+                   if s.spec_verify_steps else 0.0), **rec}
+        if spec is None:
+            spec_base = (outs, rec)
+        else:
+            base_outs, base_rec = spec_base
+            rec["greedy_tokens_match_plain"] = (
+                [o.output for o in outs] == [o.output for o in base_outs])
+            rec["tok_per_s_ratio_vs_plain"] = (
+                rec["tok_per_s_interpret"]
+                / max(base_rec["tok_per_s_interpret"], 1e-9))
+            rec["step_ratio_vs_plain"] = (
+                rec["steps"] / max(base_rec["steps"], 1))
+        records.append(rec)
+        tag = "ngram" if spec else "off"
+        lines.append(
+            f"serving/spec_{tag},"
+            f"{rec['wall_s'] * 1e6 / max(rec['tokens'], 1):.0f},"
+            f"steps={rec['steps']}|"
+            f"tokens_per_step={rec['tokens_per_step']:.2f}|"
+            f"acc_per_vstep={rec['accepted_per_verify_step']:.2f}|"
+            f"acceptance_rate={rec['acceptance_rate']:.2f}|"
+            f"tok_per_s={rec['tok_per_s_interpret']:.2f}")
 
     try:
         with open(JSON_PATH, "w") as f:

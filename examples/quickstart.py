@@ -2,6 +2,11 @@
 with the paper's full Opt4GPTQ kernel strategy.
 
   PYTHONPATH=src python examples/quickstart.py
+
+For multi-token decode steps, pass
+``EngineConfig(speculation=SpecConfig(method="ngram", k=8))`` (or the
+``--speculate ngram`` launcher flag) — speculative decoding is
+token-identical under greedy; see DESIGN.md §16 and examples/serve_gptq.py.
 """
 import jax
 import jax.numpy as jnp
@@ -45,7 +50,8 @@ def main():
         print(f"request {f.rid}: prompt_len={f.prompt_len} -> {f.output} "
               f"({f.finish_reason.value}, ttft {f.ttft * 1e3:.0f}ms)")
     print(f"generated {eng.stats.tokens_generated} tokens in "
-          f"{eng.stats.steps} engine steps")
+          f"{eng.stats.steps} engine steps "
+          f"({eng.stats.tokens_per_step:.2f} tokens/step)")
 
 
 if __name__ == "__main__":

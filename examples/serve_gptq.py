@@ -21,6 +21,14 @@ To run the same engine as an HTTP service and scrape it (DESIGN.md §15):
 On shutdown (Ctrl-C) the server writes ``trace.json`` — open it at
 https://ui.perfetto.dev to see per-request lifecycle spans and engine
 step spans.
+
+Speculative decoding + warm prefix cache (DESIGN.md §16): add
+``--speculate ngram --spec-k 8`` (or ``--speculate draft --draft-arch
+qwen3_4b``) for multi-token decode steps — greedy output is
+token-identical, and the driver log reports the acceptance rate and
+accepted tokens per verify step — and ``--prefix-cache DIR`` to persist
+the hashed prefix index across restarts (saved on exit, adopted at
+startup; paged cache only).
 """
 import argparse
 import time

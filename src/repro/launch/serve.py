@@ -46,6 +46,7 @@ def build_engine(args):
     from repro.models import build_model, layers as L
     from repro.serving.api import EngineConfig
     from repro.serving.engine import Engine
+    from repro.serving.spec_decode import SpecConfig
     from repro.serving.tracing import Tracer
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -56,12 +57,18 @@ def build_engine(args):
                           use_pallas=not args.no_pallas,
                           block_sizes=(8, 64, 64))
     tracer = Tracer() if args.trace_out else None
+    spec = None
+    if args.speculate != "off":
+        spec = SpecConfig(method=args.speculate, k=args.spec_k,
+                          draft_arch=args.draft_arch,
+                          draft_smoke=args.smoke)
     eng = Engine(model, qparams, EngineConfig(
         batch_slots=args.slots, max_len=args.max_len, kernels=kern,
         eos_id=-1, cache=args.cache, page_size=args.page_size,
         kv_quant=args.kv_quant, max_queued=args.max_queued,
         default_queue_timeout_s=args.queue_timeout,
-        metrics=not args.no_metrics, tracer=tracer))
+        metrics=not args.no_metrics, tracer=tracer,
+        speculation=spec, prefix_cache_path=args.prefix_cache))
     return cfg, eng
 
 
@@ -84,7 +91,20 @@ def run_offline(args, cfg, eng):
     t0 = time.time()
     for r in stream:
         eng.submit(r.prompt, max_new_tokens=min(r.output_len, args.max_new))
-    done = eng.run()
+    persist = args.prefix_cache and args.cache == "paged"
+    if persist:
+        # drain drops every published prefix entry (refcount reaches zero),
+        # so the warm set must be captured while requests are still live —
+        # pump manually and snapshot once about halfway through the stream
+        done, saved = [], None
+        while not eng.sched.idle:
+            done.extend(eng.step())
+            if saved is None and len(done) >= max(1, args.requests // 2):
+                saved = eng.save_prefix_cache(args.prefix_cache)
+        if saved is None:
+            saved = eng.save_prefix_cache(args.prefix_cache)
+    else:
+        done = eng.run()
     dt = time.time() - t0
     toks = sum(len(f.output) for f in done)
     lat = sorted(f.latency for f in done)
@@ -96,16 +116,27 @@ def run_offline(args, cfg, eng):
                   tok_per_s=round(toks / dt, 2),
                   p50_latency_s=round(lat[len(lat) // 2], 4),
                   wall_s=round(s.wall_s, 4), steps=s.steps,
+                  tokens_per_step=round(s.tokens_per_step, 3),
                   prefix_hit_pages=s.prefix_hit_pages,
-                  prefix_hit_tokens=s.prefix_hit_tokens)
+                  prefix_hit_tokens=s.prefix_hit_tokens,
+                  spec_proposed=s.spec_proposed,
+                  spec_accepted=s.spec_accepted,
+                  acceptance_rate=round(s.acceptance_rate, 4))
     else:
         extra = ""
         if args.cache == "paged":
             extra = (f", prefix-hit pages {s.prefix_hit_pages}"
                      f" ({s.prefix_hit_tokens} tokens)")
+        if args.speculate != "off":
+            extra += (f", spec accept {s.spec_accepted}/{s.spec_proposed}"
+                      f" ({s.acceptance_rate:.0%},"
+                      f" {s.tokens_per_step:.2f} tok/step)")
         print(f"[serve] {cfg.name} x {args.strategy} [{args.cache}]: "
               f"{len(done)} reqs, {toks} tokens, {toks / dt:.2f} tok/s "
               f"(interpret), p50 {lat[len(lat) // 2]:.2f}s{extra}")
+    if persist:
+        log_event(args, "prefix_cache_saved", path=args.prefix_cache,
+                  pages=saved)
     export_trace(args, eng)
 
 
@@ -152,6 +183,21 @@ def main(argv=None):
                     default=None, dest="kv_quant",
                     help="KV-cache storage: fp passthrough or int8 with "
                          "fused per-token scales (DESIGN.md §12)")
+    ap.add_argument("--speculate", choices=("off", "ngram", "draft"),
+                    default="off",
+                    help="speculative decoding (DESIGN.md §16): model-free "
+                         "n-gram prompt lookup or a smaller draft model, "
+                         "verified in one batched forward per step")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per verify step")
+    ap.add_argument("--draft-arch", default=None, metavar="ARCH",
+                    help="registry config for --speculate draft (honours "
+                         "--smoke); must share the target vocab")
+    ap.add_argument("--prefix-cache", default=None, metavar="DIR",
+                    help="persisted prefix-cache directory: warm pages are "
+                         "loaded at startup if present (paged cache only); "
+                         "offline mode snapshots the live index there "
+                         "mid-run (drain evicts published entries)")
     ap.add_argument("--serve", action="store_true",
                     help="run the OpenAI-style /v1/completions HTTP "
                          "front-end instead of the offline request stream")

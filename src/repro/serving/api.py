@@ -27,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.serving.kv_quant import KVQuantConfig
+from repro.serving.spec_decode import SpecConfig
 
 
 class RequestState(str, enum.Enum):
@@ -115,6 +116,15 @@ class EngineConfig:
     # step-span tracer (serving/tracing.py::Tracer) recording per-request
     # lifecycle + per-step spans for Perfetto export; None = tracing off
     tracer: object = None
+    # ---- speculative decoding (DESIGN.md §16) ----
+    # a SpecConfig turns the decode loop into propose-k / batched-verify
+    # steps emitting up to k+1 tokens each; None = plain one-token decode
+    speculation: SpecConfig | None = None
+    # paged layout: directory to persist/restore the hashed prefix-cache
+    # index + page payloads across engine restarts (DESIGN.md §16); the
+    # engine loads it at construction when the directory exists and
+    # ``Engine.save_prefix_cache()`` writes it
+    prefix_cache_path: str | None = None
 
     def __post_init__(self):
         if self.batch_slots <= 0:
@@ -171,6 +181,20 @@ class EngineConfig:
             raise ValueError(
                 f"default_queue_timeout_s must be > 0, got "
                 f"{self.default_queue_timeout_s}")
+        if self.speculation is not None:
+            if not isinstance(self.speculation, SpecConfig):
+                raise ValueError(
+                    f"speculation must be a SpecConfig, got "
+                    f"{self.speculation!r}")
+            if self.speculation.k >= self.max_len:
+                raise ValueError(
+                    f"speculation k={self.speculation.k} must be < "
+                    f"max_len={self.max_len}")
+        if (self.prefix_cache_path is not None
+                and not isinstance(self.prefix_cache_path, str)):
+            raise ValueError(
+                f"prefix_cache_path must be a directory path string, got "
+                f"{self.prefix_cache_path!r}")
 
 
 @dataclasses.dataclass
@@ -188,6 +212,10 @@ class RequestOutput:
     t_first_token: float
     t_done: float
     finish_reason: FinishReason | None = None
+    # speculative decoding (DESIGN.md §16): draft tokens this request was
+    # offered / kept across its verify steps (both 0 with speculation off)
+    spec_proposed: int = 0
+    spec_accepted: int = 0
 
     @property
     def state(self) -> RequestState:
@@ -205,11 +233,24 @@ class RequestOutput:
 
     @property
     def tpot(self) -> float:
-        """Time per output token over the decode phase (post-first-token)."""
+        """Time per output token over the decode phase (post-first-token).
+
+        Deliberately normalized by *emitted tokens*, not engine steps — a
+        speculative verify step that lands k+1 tokens reads as k+1 cheap
+        tokens here, keeping tpot comparable between spec-on and spec-off
+        runs (DESIGN.md §16)."""
         n = len(self.output)
         if n <= 1 or not self.t_first_token:
             return 0.0
         return (self.t_done - self.t_first_token) / (n - 1)
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens this request accepted (0.0
+        when it never saw a speculative step)."""
+        if not self.spec_proposed:
+            return 0.0
+        return self.spec_accepted / self.spec_proposed
 
     @property
     def latency(self) -> float:

@@ -60,6 +60,8 @@ transfer happens per decode step — the (B,) sampled-token vector.
 from __future__ import annotations
 
 import functools
+import json
+import os
 import warnings
 from typing import Iterator, Optional, Sequence
 
@@ -71,6 +73,7 @@ from repro.models import LM
 from repro.serving import clock as CLK
 from repro.serving import kv_cache as KV
 from repro.serving import kv_quant as KQ
+from repro.serving import spec_decode as SD
 from repro.serving.api import (EngineConfig, FinishReason, QueueFullError,
                                RequestOutput, RequestState, StreamEvent)
 from repro.serving.metrics import EngineMetrics, make_engine_metrics
@@ -160,12 +163,43 @@ class EngineStats:
     def decode_throughput(self) -> float:
         return self.tokens_generated / self.wall_s if self.wall_s else 0.0
 
+    # ---- speculative decoding (DESIGN.md §16) ----
+    @property
+    def spec_proposed(self) -> int:
+        return int(self._m.spec_proposed.value)
+
+    @property
+    def spec_accepted(self) -> int:
+        return int(self._m.spec_accepted.value)
+
+    @property
+    def spec_verify_steps(self) -> int:
+        return int(self._m.spec_verify_steps.value)
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Accepted / proposed draft tokens (0.0 before any proposal)."""
+        p = self.spec_proposed
+        return self.spec_accepted / p if p else 0.0
+
+    @property
+    def tokens_per_step(self) -> float:
+        """Decode tokens emitted per engine step — 1.0 for plain decode,
+        up to k+1 under speculation.  The multi-token-step-aware
+        denominator for throughput accounting: tpot and tok/s derive from
+        *emitted tokens* (see ``RequestOutput.tpot``), never from step
+        counts, so BENCH_serving.json stays comparable across spec
+        on/off."""
+        s = self.steps
+        return self.tokens_generated / s if s else 0.0
+
     def __repr__(self) -> str:
         fields = ("tokens_generated", "prefill_tokens", "steps", "wall_s",
                   "prefix_hit_pages", "prefix_hit_tokens", "peak_active",
                   "preemptions", "offloaded_pages", "offloaded_bytes",
                   "restored_pages", "rejected_submits",
-                  "deferred_admissions", "shed_requests")
+                  "deferred_admissions", "shed_requests", "spec_proposed",
+                  "spec_accepted")
         inner = ", ".join(f"{f}={getattr(self, f)!r}" for f in fields)
         return f"EngineStats({inner})"
 
@@ -302,6 +336,35 @@ class Engine:
         self._read_slot = jax.jit(self._read_slot_impl)
         self._write_slot = jax.jit(self._write_slot_impl,
                                    donate_argnums=() if cpu else (0,))
+
+        # ---- speculative decoding (DESIGN.md §16) ----
+        self._spec: Optional[SD.Speculator] = None
+        if config.speculation is not None:
+            cfg = model.cfg
+            # rollback-by-not-advancing-seq_lens needs positional KV that
+            # rejected writes can be abandoned in; recurrent (SSM) state and
+            # ring (SWA) caches are mutated destructively by every token
+            if cfg.family in ("ssm", "hybrid") or cfg.sliding_window \
+                    or cfg.meta_tokens or cfg.attn_type != "gqa":
+                raise ValueError(
+                    "speculative decoding requires a full-attention GQA "
+                    "stack with positional KV (no SSM/sliding-window/MLA/"
+                    f"meta tokens), got family={cfg.family!r} "
+                    f"attn_type={cfg.attn_type!r}")
+            self._spec = SD.make_speculator(config.speculation, model,
+                                            config, kernels=self.kernels)
+            self._verify = jax.jit(
+                functools.partial(SD.verify_impl, self.model, self.kernels),
+                static_argnames=("all_greedy",),
+                donate_argnums=() if cpu else (4, 5))   # cache, seq_lens
+
+        # ---- prefix-cache persistence (DESIGN.md §16) ----
+        if config.prefix_cache_path is not None:
+            if self.layout != "paged":
+                raise ValueError(
+                    "prefix_cache_path persists the hashed prefix cache — "
+                    "a paged-layout feature (cache='paged')")
+            self._load_prefix_cache(config.prefix_cache_path)
 
     # ------------------------------------------------------------ jitted fns
     @staticmethod
@@ -608,6 +671,75 @@ class Engine:
             lambda a, h: a.at[:, idx].set(jnp.asarray(h, a.dtype)),
             self.cache, payload)
 
+    # ----------------------------------- prefix-cache persistence (§16)
+    def save_prefix_cache(self, path: Optional[str] = None) -> int:
+        """Serialize the hashed prefix-cache index + its page payloads to a
+        directory (``index.json`` + ``pages.npz``) so a future engine with
+        the same model/quant config starts warm.  Safe because the hash
+        chain is deterministic across processes (sha256 seed keyed by the
+        kv-quant mode + page size — ``kv_cache.prefix_hash_seed``), so the
+        persisted keys mean the same token prefixes to the loader.
+        Returns the number of pages written."""
+        if self.layout != "paged":
+            raise ValueError("prefix-cache persistence is paged-layout only")
+        path = path if path is not None else self.config.prefix_cache_path
+        if path is None:
+            raise ValueError("no prefix_cache_path configured or passed")
+        pc = self.pc
+        keys, pages = pc.export_prefix_index()
+        payload = self._gather_pages(pages) if pages else None
+        leaves = jax.tree_util.tree_leaves(payload) if pages else []
+        os.makedirs(path, exist_ok=True)
+        index = {"version": 1, "seed": int(pc._hash_seed),
+                 "page_size": pc.page_size,
+                 "keys": [str(k) for k in keys], "n_leaves": len(leaves)}
+        if leaves:
+            np.savez(os.path.join(path, "pages.npz"),
+                     **{f"leaf_{i}": leaf for i, leaf in enumerate(leaves)})
+        with open(os.path.join(path, "index.json"), "w") as f:
+            json.dump(index, f)
+        return len(pages)
+
+    def _load_prefix_cache(self, path: str) -> int:
+        """Warm-start the prefix cache from ``save_prefix_cache`` output.
+        Missing directory/index is a cold start (returns 0); an index saved
+        under a different quant mode or page size raises — its page bytes
+        would be silently wrong for this cache.  Adopted pages are pinned
+        (refcount 1, no owning sequence) so the warm set is never evicted;
+        pool pressure permitting, a prefix subset is adopted."""
+        pc = self.pc
+        index_path = os.path.join(path, "index.json")
+        if not os.path.exists(index_path):
+            return 0
+        with open(index_path) as f:
+            index = json.load(f)
+        if (index.get("seed") != int(pc._hash_seed)
+                or index.get("page_size") != pc.page_size):
+            raise ValueError(
+                f"prefix cache at {path!r} was saved under a different "
+                f"kv-quant mode or page size (seed/page_size mismatch) — "
+                f"its page payloads are not valid for this engine")
+        keys = [int(k) for k in index["keys"]]
+        if not keys:
+            return 0
+        if index["n_leaves"] != len(jax.tree_util.tree_leaves(self.cache)):
+            raise ValueError(
+                f"prefix cache at {path!r} was saved from a different model "
+                f"cache shape ({index['n_leaves']} leaves)")
+        data = np.load(os.path.join(path, "pages.npz"))
+        leaves = [data[f"leaf_{i}"] for i in range(index["n_leaves"])]
+        treedef = jax.tree_util.tree_structure(self.cache)
+        payload = jax.tree_util.tree_unflatten(treedef, leaves)
+        adopted = pc.adopt_prefix_pages(keys)
+        if not adopted:
+            return 0
+        col = {k: i for i, k in enumerate(keys)}
+        cols = [col[k] for k, _ in adopted]
+        dest = [p for _, p in adopted]
+        sub = jax.tree_util.tree_map(lambda a: a[:, cols], payload)
+        self._scatter_pages(dest, sub)
+        return len(adopted)
+
     def _ctx_tokens(self, req: Request) -> list[int]:
         """The token span a preempted request's KV checkpoint covers:
         prompt plus every generated token already *written* to the cache —
@@ -622,6 +754,8 @@ class Engine:
         row = self.sched.preemption_victim(min_priority)
         if row is None:
             return False
+        if self._spec is not None:
+            self._spec.invalidate(row)
         a = self.sched.retire(row)
         req = a.req
         rec = self.pc.offload(req.rid, gather=self._gather_pages)
@@ -795,10 +929,14 @@ class Engine:
             self.slots.free(row)
         a.req.state = (RequestState.ABORTED if reason is FinishReason.ABORT
                        else RequestState.FINISHED)
+        if self._spec is not None:
+            self._spec.invalidate(row)
         out = RequestOutput(
             rid=a.req.rid, prompt_len=len(a.req.tokens), output=a.output,
             arrival=a.req.arrival, t_first_token=a.t_first_token,
-            t_done=self.clock.now(), finish_reason=reason)
+            t_done=self.clock.now(), finish_reason=reason,
+            spec_proposed=a.req.spec_proposed,
+            spec_accepted=a.req.spec_accepted)
         m = self.metrics
         m.requests_finished.labels(reason=reason.value).inc()
         if out.t_first_token:
@@ -853,6 +991,10 @@ class Engine:
             top_ks[row] = sp.top_k
             top_ps[row] = sp.top_p
         all_greedy = bool(greedy.all())
+        if self._spec is not None:
+            return self._step_speculative(t_step0, finished, tokens, live,
+                                          greedy, temps, top_ks, top_ps,
+                                          all_greedy)
         if all_greedy:
             # argmax-only trace: no rng consumption, no sampling operands
             samp = (None, None, None, None, None)
@@ -884,6 +1026,107 @@ class Engine:
             tok = toks[s]
             a.output.append(tok)
             self._emit_token(a, s, tok, finished)
+        self._end_step(t_step0, finished, decoded=decoded)
+        return finished
+
+    def _step_speculative(self, t_step0: float,
+                          finished: list[RequestOutput], tokens, live,
+                          greedy, temps, top_ks, top_ps,
+                          all_greedy: bool) -> list[RequestOutput]:
+        """Speculative decode step (DESIGN.md §16): propose k drafts per
+        row, score all k+1 positions in ONE batched multi-token forward
+        over the live cache (the paged layout routes it through the
+        chunked ``paged_prefill`` kernel), accept via
+        ``sampler.accept_speculative``, and emit up to k+1 tokens.
+
+        The sync-free invariant holds per *verify* step: the single
+        device→host transfer is the packed (B, K+2) int32 result
+        ``[n_accepted | emitted...]`` — drafts themselves never make a
+        separate host round trip.  Rollback is implicit: ``seq_lens`` (and
+        the host page-length mirror) advance only to the accepted
+        position; rejected positions' KV is dead weight that the next
+        verify span overwrites before anything can attend it.  Per-row
+        draft budgets are capped at ``max_new - emitted - 1`` so a full
+        acceptance plus the bonus token lands exactly on the reserved
+        page/slot footprint, never past it.
+        """
+        spec = self._spec
+        bs = self.batch_rows
+        rows: dict[int, tuple[int, list[int], int]] = {}
+        for row, a in self.sched.active.items():
+            cap = max(0, min(spec.k,
+                             a.req.max_new_tokens - len(a.output) - 1))
+            rows[row] = (a.req.rid, a.req.tokens + a.output, cap)
+        t_p0 = self.clock.now()
+        samp_host = None if all_greedy else (greedy, temps, top_ks, top_ps)
+        prop = spec.propose(rows, all_greedy=all_greedy, samp=samp_host)
+        caps = np.zeros((bs,), np.int32)
+        for row, (_rid, _ctx, cap) in rows.items():
+            caps[row] = cap
+        lens = np.minimum(np.asarray(prop.draft_lens, np.int32), caps)
+        proposed = int(lens.sum())
+        t_p1 = self.clock.now()
+        m = self.metrics
+        m.spec_proposed.inc(proposed)
+        for row, a in self.sched.active.items():
+            a.req.spec_proposed += int(lens[row])
+        if self.tracer is not None:
+            self.tracer.propose_span(t_p0, t_p1, step=self._step_no,
+                                     proposed=proposed,
+                                     batch=len(self.sched.active))
+        if all_greedy:
+            samp = (None, None, None, None, None)
+        else:
+            self.rng, sub = jax.random.split(self.rng)
+            samp = (jnp.asarray(greedy), jnp.asarray(temps),
+                    jnp.asarray(top_ks), jnp.asarray(top_ps),
+                    jax.random.split(sub, bs))
+        drafts_dev = prop.drafts if not isinstance(prop.drafts, np.ndarray) \
+            else jnp.asarray(prop.drafts)
+        head = (self.params, jnp.asarray(tokens), drafts_dev,
+                jnp.asarray(lens))
+        if self.layout == "paged":
+            pc = self.pc
+            packed_dev, self.cache, pc.seq_lens = self._verify(
+                *head, self.cache, pc.seq_lens, pc.block_tables,
+                jnp.asarray(live), *samp, prop.probs, all_greedy=all_greedy)
+        else:
+            packed_dev, self.slots.cache, self.slots.seq_lens = self._verify(
+                *head, self.slots.cache, self.slots.seq_lens, None,
+                jnp.asarray(live), *samp, prop.probs, all_greedy=all_greedy)
+        # the single device->host transfer of the verify step
+        packed = np.asarray(jax.device_get(packed_dev))
+        decoded = 0
+        accepted_total = 0
+        for row in sorted(self.sched.active):
+            a = self.sched.active[row]
+            rid = a.req.rid
+            n_acc = int(packed[row, 0])
+            emitted = packed[row, 1:2 + n_acc].tolist()
+            if self.layout == "paged":
+                self.pc.lengths[rid] += n_acc + 1   # host seq_lens mirror
+            a.req.spec_accepted += n_acc
+            accepted_total += n_acc
+            m.spec_accepted.inc(n_acc)
+            m.spec_accept_len.observe(n_acc)
+            for tok in emitted:
+                decoded += 1
+                a.output.append(int(tok))
+                self._emit_token(a, row, int(tok), finished)
+                if row not in self.sched.active:
+                    # retired mid-span (stop token / length / abort): the
+                    # retirement already freed the row's device state, so
+                    # later emitted tokens are dropped with it
+                    break
+            else:
+                spec.observe(row, rid, n_acc)
+        m.tokens_generated.inc(decoded)
+        m.steps.inc()
+        m.spec_verify_steps.inc()
+        if self.tracer is not None:
+            self.tracer.verify_span(t_p1, self.clock.now(),
+                                    step=self._step_no, proposed=proposed,
+                                    accepted=accepted_total, decoded=decoded)
         self._end_step(t_step0, finished, decoded=decoded)
         return finished
 

@@ -39,6 +39,7 @@ moves its own pools.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Callable, Optional
 
 import jax
@@ -53,6 +54,19 @@ from repro.serving import kv_quant as KQ
 DEFAULT_CACHE_DTYPE = jnp.float32
 
 NULL_PAGE = 0
+
+
+def prefix_hash_seed(quant_tag: tuple, page_size: int) -> int:
+    """Deterministic seed for the hashed-prefix chain, derived from the KV
+    quant mode + page size via sha256 — NOT Python's ``hash()``, whose
+    string hashing is randomized per process (PYTHONHASHSEED).  The rest of
+    the chain (``hash((int_key, int_tuple))``) only ever hashes integers,
+    which Python hashes deterministically, so a deterministic seed makes
+    the whole chain stable across processes — the property that lets a
+    persisted prefix index (DESIGN.md §16) be reloaded by a fresh engine."""
+    blob = repr(("kv_prefix_seed_v1", page_size) + tuple(quant_tag))
+    digest = hashlib.sha256(blob.encode("utf-8")).digest()
+    return int.from_bytes(digest[:8], "big", signed=True)
 
 
 class SlotCache:
@@ -189,7 +203,7 @@ class PagedCache:
         # instance (persisted prefix caches, engine restarts).
         quant_tag = ((self.kv_quant.dtype, self.kv_quant.granularity)
                      if quantized else ("fp", str(self.compute_dtype)))
-        self._hash_seed = hash(("kv_quant_mode",) + quant_tag)
+        self._hash_seed = prefix_hash_seed(quant_tag, self.page_size)
         self._prefix_index: dict[int, int] = {}      # hash key -> page id
         self._page_key: dict[int, int] = {}          # page id -> hash key
         self.prefix_hits: dict[int, int] = {}        # seq_id -> pages reused
@@ -377,6 +391,34 @@ class PagedCache:
             if key not in self._prefix_index and page not in self._page_key:
                 self._prefix_index[key] = page
                 self._page_key[page] = key
+
+    def export_prefix_index(self) -> tuple[list[int], list[int]]:
+        """Live prefix-cache entries as parallel (keys, page_ids) lists in
+        deterministic (key-sorted) order — the engine's persistence layer
+        (DESIGN.md §16) serializes these alongside the page payloads."""
+        items = sorted((k, p) for k, p in self._prefix_index.items()
+                       if self.refcount[p] > 0)
+        return [k for k, _ in items], [p for _, p in items]
+
+    def adopt_prefix_pages(self, keys) -> list[tuple[int, int]]:
+        """Re-seat a persisted prefix index: allocate one *pinned* physical
+        page per key (refcount starts at 1 with no owning sequence, so the
+        warm set is never evicted) and publish it under that key.  Returns
+        ``(key, page_id)`` pairs for the keys actually adopted — the caller
+        scatters the matching payloads there.  Keys already present or past
+        the free list's capacity are skipped (a chain lookup simply stops at
+        its first missing link, so partial adoption is always safe)."""
+        adopted: list[tuple[int, int]] = []
+        for key in keys:
+            key = int(key)
+            if key in self._prefix_index or not self.free_list:
+                continue
+            page = self.free_list.pop()
+            self.refcount[page] += 1
+            self._prefix_index[key] = page
+            self._page_key[page] = key
+            adopted.append((key, page))
+        return adopted
 
     # ------------------------------------------------------- offload / restore
     def _gather_pages_local(self, page_ids):
@@ -692,3 +734,57 @@ class PagedCache:
         k = k.reshape(-1, self.kv_heads, self.head_dim)
         v = v.reshape(-1, self.kv_heads, self.head_dim)
         return k[:length], v[:length]
+
+    # -------------------------------------------- speculative write rollback
+    def spec_snapshot(self, seq_id: int) -> dict:
+        """Checkpoint the state a k-token speculative write can disturb
+        (data-path API, ``alloc_pools=True``): the payload bytes of the
+        partially-filled tail page plus the current length/table extents.
+
+        Per-token scales (and fp passthrough) don't strictly need the
+        payload copy — positions past ``lengths`` are never read, so length
+        rollback alone is lossless.  Per-*page* scales do: appending into a
+        page requantizes the whole page against a new amax, so the retained
+        prefix's bytes change.  ``truncate_seq(..., snapshot=...)``
+        restores those bytes exactly, which is what makes the per-page
+        requantize write path round-trip a rollback losslessly: re-writing
+        the accepted tokens afterwards performs the identical
+        dequant-overlay-requant computation a non-speculative append would
+        have, byte for byte (tested)."""
+        self._require_pools()
+        length = self.lengths[seq_id]
+        tail: Optional[dict] = None
+        tail_page = None
+        if length % self.page_size:
+            tail_page = self.tables[seq_id][length // self.page_size]
+            tail = self._gather_pages_local([tail_page])
+        return {"length": length, "n_table": len(self.tables[seq_id]),
+                "tail_page": tail_page, "tail": tail}
+
+    def truncate_seq(self, seq_id: int, snapshot: dict) -> None:
+        """Roll a speculative extension back to the snapshot: restore the
+        tail page's payload bytes, free pages allocated past the snapshot's
+        table extent, and reset ``lengths``.  The caller then re-appends
+        the *accepted* tokens through the normal write path — under
+        per-page scales that reproduces exactly the bytes of having only
+        ever written them."""
+        self._require_pools()
+        if self.lengths[seq_id] < snapshot["length"]:
+            raise ValueError(
+                f"seq {seq_id} is shorter ({self.lengths[seq_id]}) than its "
+                f"snapshot ({snapshot['length']}) — nothing to roll back")
+        table = self.tables[seq_id]
+        while len(table) > snapshot["n_table"]:
+            p = table.pop()
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self.free_list.append(p)
+        if snapshot["tail"] is not None:
+            # the tail page cannot have been COW-swapped meanwhile: spec
+            # writes went through _ensure_writable, so it is private — but
+            # its *identity* may differ from the snapshot's if a COW fired
+            # during the speculative write; restore into the current page
+            cur = table[snapshot["length"] // self.page_size]
+            self._scatter_pages_local([cur], snapshot["tail"])
+        self.lengths[seq_id] = snapshot["length"]
+        self._sync_row(seq_id)

@@ -48,6 +48,9 @@ LATENCY_BUCKETS = (0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0,
                    16.0, 32.0, 64.0, 128.0)
 STEP_BUCKETS = (0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1,
                 0.25, 0.5, 1.0, 2.0, 4.0)
+# accepted-draft-prefix length per verify step (DESIGN.md §16): small-integer
+# buckets up to the SpecConfig.k ceiling of 16
+SPEC_ACCEPT_BUCKETS = (0, 1, 2, 3, 4, 5, 6, 8, 12, 16)
 
 _INF = float("inf")
 
@@ -527,6 +530,16 @@ class EngineMetrics:
         self.faults_injected = r.counter(
             "engine_faults_injected_total",
             "FaultInjector events fired, by kind", labels=("kind",))
+        # speculative decoding (DESIGN.md §16) ------------------------------
+        self.spec_proposed = r.counter(
+            "engine_spec_proposed_total",
+            "Draft tokens proposed by the speculator")
+        self.spec_accepted = r.counter(
+            "engine_spec_accepted_total",
+            "Draft tokens accepted by the verify pass")
+        self.spec_verify_steps = r.counter(
+            "engine_spec_verify_steps_total",
+            "Speculative verify steps executed")
         # gauges ------------------------------------------------------------
         self.active_requests = r.gauge(
             "engine_active_requests", "Requests currently decoding")
@@ -560,6 +573,10 @@ class EngineMetrics:
         self.step_duration = r.histogram(
             "engine_step_duration_seconds",
             "Engine.step() duration (injectable clock)", STEP_BUCKETS)
+        self.spec_accept_len = r.histogram(
+            "engine_spec_accept_length",
+            "Accepted-draft-prefix length per request per verify step",
+            SPEC_ACCEPT_BUCKETS)
 
     def sync_pool(self, pc) -> None:
         """Refresh the page-pool occupancy/offload gauges from a

@@ -52,6 +52,29 @@ def sample(logits: jnp.ndarray, rng, params: SamplingParams) -> jnp.ndarray:
     return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
 
 
+def filter_logits(logits: jnp.ndarray, temps: jnp.ndarray,
+                  top_ks: jnp.ndarray, top_ps: jnp.ndarray) -> jnp.ndarray:
+    """Temperature / top-k / top-p filtering over independent rows.
+
+    logits: (N, V) any float dtype; temps: (N,) > 0; top_ks: (N,) int32
+    (0 = off); top_ps: (N,) float (1.0 = off).  Returns f32 logits with
+    ``-inf`` outside the per-row nucleus — ``softmax`` of the result is the
+    filtered sampling distribution.  Same op order as ``sample``: top-p is
+    computed on the post-top-k distribution.
+    """
+    v = logits.shape[-1]
+    lf = logits.astype(jnp.float32) / jnp.maximum(temps, 1e-6)[:, None]
+    # top-k: k-th largest value per row as threshold (k=0 keeps everything)
+    kth_idx = jnp.clip(v - top_ks, 0, v - 1)
+    kth = jnp.take_along_axis(jnp.sort(lf, axis=-1), kth_idx[:, None], axis=-1)
+    lf = jnp.where((top_ks[:, None] > 0) & (lf < kth), -jnp.inf, lf)
+    sorted_desc = jnp.sort(lf, axis=-1)[:, ::-1]
+    cum = jnp.cumsum(jax.nn.softmax(sorted_desc, axis=-1), axis=-1)
+    cutoff_idx = jnp.clip(jnp.sum(cum < top_ps[:, None], axis=-1), 0, v - 1)
+    cutoff = jnp.take_along_axis(sorted_desc, cutoff_idx[:, None], axis=-1)
+    return jnp.where((top_ps[:, None] < 1.0) & (lf < cutoff), -jnp.inf, lf)
+
+
 def sample_batched(logits: jnp.ndarray, keys, *, greedy: jnp.ndarray,
                    temps: jnp.ndarray, top_ks: jnp.ndarray,
                    top_ps: jnp.ndarray) -> jnp.ndarray:
@@ -66,22 +89,114 @@ def sample_batched(logits: jnp.ndarray, keys, *, greedy: jnp.ndarray,
     lower-precision logits the f32 cast below can move cutoff boundaries
     relative to ``sample``'s native-dtype math.
     """
-    v = logits.shape[-1]
     greedy_toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-
-    lf = logits.astype(jnp.float32) / jnp.maximum(temps, 1e-6)[:, None]
-    # top-k: k-th largest value per row as threshold (k=0 keeps everything)
-    kth_idx = jnp.clip(v - top_ks, 0, v - 1)
-    kth = jnp.take_along_axis(jnp.sort(lf, axis=-1), kth_idx[:, None], axis=-1)
-    lf = jnp.where((top_ks[:, None] > 0) & (lf < kth), -jnp.inf, lf)
-    # top-p on the post-top-k distribution (same op order as `sample`)
-    sorted_desc = jnp.sort(lf, axis=-1)[:, ::-1]
-    cum = jnp.cumsum(jax.nn.softmax(sorted_desc, axis=-1), axis=-1)
-    cutoff_idx = jnp.clip(jnp.sum(cum < top_ps[:, None], axis=-1), 0, v - 1)
-    cutoff = jnp.take_along_axis(sorted_desc, cutoff_idx[:, None], axis=-1)
-    lf = jnp.where((top_ps[:, None] < 1.0) & (lf < cutoff), -jnp.inf, lf)
-
+    lf = filter_logits(logits, temps, top_ks, top_ps)
     sampled = jax.vmap(
         lambda key, row: jax.random.categorical(key, row[None, :], axis=-1)[0]
     )(keys, lf).astype(jnp.int32)
     return jnp.where(greedy, greedy_toks, sampled)
+
+
+def _emit_matrix(drafts: jnp.ndarray, n_acc: jnp.ndarray,
+                 bonus: jnp.ndarray) -> jnp.ndarray:
+    """(B, K) drafts + per-row bonus at position ``n_acc`` -> (B, K+1)
+    emitted tokens (positions past ``n_acc`` zeroed)."""
+    b, k = drafts.shape
+    pos = jnp.arange(k + 1, dtype=jnp.int32)[None, :]
+    drafts_p = jnp.pad(drafts, ((0, 0), (0, 1)))
+    return jnp.where(
+        pos < n_acc[:, None], drafts_p,
+        jnp.where(pos == n_acc[:, None], bonus[:, None], 0)).astype(jnp.int32)
+
+
+def accept_speculative(logits: jnp.ndarray, drafts: jnp.ndarray,
+                       draft_lens: jnp.ndarray, keys=None, *,
+                       greedy=None, temps=None, top_ks=None, top_ps=None,
+                       draft_probs=None, all_greedy: bool = False):
+    """Vectorized accept test for speculative decoding (DESIGN.md §16).
+
+    logits: (B, K+1, V) target logits from the verify pass — position ``j``
+    scores the token that follows ``j`` accepted drafts (position ``K`` is
+    the bonus distribution when every draft accepts).  drafts: (B, K) int32;
+    draft_lens: (B,) int32 in [0, K] (rows may propose fewer than K).
+
+    Returns ``(n_acc, emitted)``: ``n_acc`` (B,) int32 accepted-draft counts
+    and ``emitted`` (B, K+1) int32 where ``emitted[:, :n_acc + 1]`` are the
+    committed tokens (accepted drafts plus one bonus/resample token) and the
+    tail is zeroed.
+
+    Three acceptance rules, mixed per row via ``greedy``:
+
+    * greedy rows — longest prefix where each draft matches the target
+      argmax; bonus is the argmax after the accepted prefix.  Bit-identical
+      to plain greedy decode by construction.
+    * sampled rows without ``draft_probs`` (model-free proposers) —
+      *sample-and-match*: draw one token per position from the filtered
+      target distribution (same math as ``sample_batched``) and accept
+      drafts while they equal the draw.  The emitted tokens are the draws
+      themselves, so the output is distributed exactly as ancestral
+      sampling from the target for *any* proposal.
+    * sampled rows with ``draft_probs`` (B, K, V) (draft-model proposers) —
+      standard speculative rejection sampling: accept draft ``d_j`` with
+      probability ``min(1, p(d_j) / q(d_j))``; on first rejection resample
+      from the residual ``normalize(max(p - q, 0))``; when all drafts
+      accept, sample the bonus from the target distribution.
+    """
+    b, s, v = logits.shape
+    k = s - 1
+    pos = jnp.arange(k, dtype=jnp.int32)[None, :]
+    in_len = pos < draft_lens[:, None]
+
+    tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)        # (B, K+1)
+    g_match = (drafts == tgt[:, :k]) & in_len
+    g_acc = jnp.sum(jnp.cumprod(g_match.astype(jnp.int32), axis=1), axis=1)
+    g_bonus = jnp.take_along_axis(tgt, g_acc[:, None], axis=1)[:, 0]
+    g_emit = _emit_matrix(drafts, g_acc, g_bonus)
+    if all_greedy:
+        return g_acc, g_emit
+
+    # filtered target distribution at every position, per-row params
+    # broadcast across the K+1 verify positions
+    rep = lambda a: jnp.repeat(a, s, axis=0)
+    lf = filter_logits(logits.reshape(b * s, v), rep(temps), rep(top_ks),
+                       rep(top_ps)).reshape(b, s, v)
+
+    if draft_probs is None:
+        # sample-and-match: one draw per position, independent keys
+        pos_keys = jax.vmap(lambda key: jax.random.split(key, s))(keys)
+        draw = jax.vmap(jax.vmap(
+            lambda key, row: jax.random.categorical(key, row[None], axis=-1)[0]
+        ))(pos_keys, lf).astype(jnp.int32)                     # (B, K+1)
+        s_match = (drafts == draw[:, :k]) & in_len
+        s_acc = jnp.sum(jnp.cumprod(s_match.astype(jnp.int32), axis=1), axis=1)
+        s_emit = jnp.where(
+            jnp.arange(s, dtype=jnp.int32)[None, :] <= s_acc[:, None],
+            draw, 0)
+    else:
+        # rejection sampling against the draft distribution q
+        p = jax.nn.softmax(lf, axis=-1)                        # (B, K+1, V)
+        k_u, k_res = jax.vmap(lambda key: tuple(jax.random.split(key)))(keys)
+        u = jax.vmap(lambda key: jax.random.uniform(key, (k,)))(k_u)
+        p_d = jnp.take_along_axis(p[:, :k], drafts[..., None], axis=-1)[..., 0]
+        q_d = jnp.take_along_axis(draft_probs, drafts[..., None],
+                                  axis=-1)[..., 0]
+        # u <= p/q without the divide (q_d == 0 -> accept iff p_d > 0)
+        ok = (u * q_d <= p_d) & in_len
+        s_acc = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+        p_at = jnp.take_along_axis(p, s_acc[:, None, None], axis=1)[:, 0]
+        q_at = jnp.take_along_axis(
+            draft_probs, jnp.minimum(s_acc, k - 1)[:, None, None],
+            axis=1)[:, 0]
+        rejected = s_acc < draft_lens
+        res = jnp.where(rejected[:, None], jnp.clip(p_at - q_at, 0.0), p_at)
+        norm = jnp.sum(res, axis=-1, keepdims=True)
+        res = jnp.where(norm > 0, res / jnp.maximum(norm, 1e-20), p_at)
+        final = jax.vmap(
+            lambda key, row: jax.random.categorical(
+                key, jnp.log(jnp.maximum(row, 1e-20))[None], axis=-1)[0]
+        )(k_res, res).astype(jnp.int32)
+        s_emit = _emit_matrix(drafts, s_acc, final)
+
+    n_acc = jnp.where(greedy, g_acc, s_acc)
+    emitted = jnp.where(greedy[:, None], g_emit, s_emit)
+    return n_acc, emitted

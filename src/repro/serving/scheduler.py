@@ -44,6 +44,11 @@ class Request:
     saved_t_first: float = 0.0
     # queue position (assigned once at first submit; stable across requeues)
     order: int | None = None
+    # ---- speculative decoding (DESIGN.md §16) ----
+    # draft tokens proposed for / accepted by this request across its
+    # verify steps (both stay 0 with speculation off); survive preemption
+    spec_proposed: int = 0
+    spec_accepted: int = 0
 
 
 @dataclasses.dataclass

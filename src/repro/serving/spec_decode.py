@@ -1,0 +1,421 @@
+"""Speculative decoding subsystem (DESIGN.md §16).
+
+Decode throughput is bounded by one token per model step; this module lifts
+that to up to ``k + 1`` tokens per *verify* step.  A ``Speculator`` proposes
+``k`` draft tokens per running request, the engine scores all drafts plus
+the current input token in one batched multi-token forward over the live KV
+cache (the paged layout routes it through the chunked write-masked
+``paged_prefill`` kernel), and ``sampler.accept_speculative`` keeps the
+longest valid prefix plus one bonus/resample token.  Rollback is free by
+construction: speculative KV writes land at positions ``[L, L + wl)`` but
+``seq_lens`` / the host page-length mirror only advance to the accepted
+position, so rejected tokens are never attended and are overwritten by the
+next verify span (the engine's write-span accounting guarantees coverage).
+
+Two built-in proposers:
+
+* ``NGramSpeculator`` — model-free prompt-lookup: the longest suffix
+  n-gram of the request's own token history that occurred earlier predicts
+  its historical continuation.  Pure host-side, zero extra parameters.
+* ``DraftModelSpeculator`` — a smaller registry config run on its own slot
+  cache; drafts come from a K-step ``lax.scan`` and stay on device,
+  together with the draft distribution ``q`` needed for rejection sampling
+  under temperature.
+
+Module-level imports deliberately stop at ``sampler`` — ``api.py`` imports
+``SpecConfig`` from here, so anything engine/scheduler-side is imported
+lazily inside methods.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.sampler import accept_speculative, filter_logits
+
+MAX_SPEC_K = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding knobs, carried by ``EngineConfig(speculation=)``.
+
+    ``method`` selects the proposer: ``"ngram"`` (prompt lookup, default) or
+    ``"draft"`` (small draft model — needs ``draft_arch`` naming a registry
+    config, or an injected ``draft_model``/``draft_params`` pair).  ``k`` is
+    the draft length per verify step.  ``draft_smoke`` builds the draft
+    arch through ``smoke_config`` (tests / CI); real launches set it False.
+    """
+    method: str = "ngram"
+    k: int = 4
+    ngram_max: int = 4
+    ngram_min: int = 1
+    draft_arch: Optional[str] = None
+    draft_smoke: bool = True
+    draft_model: object = None
+    draft_params: object = None
+    draft_seed: int = 0
+
+    def __post_init__(self):
+        if self.method not in ("ngram", "draft"):
+            raise ValueError(
+                f"speculation method must be 'ngram' or 'draft', "
+                f"got {self.method!r}")
+        if not 1 <= self.k <= MAX_SPEC_K:
+            raise ValueError(
+                f"speculation k must be in [1, {MAX_SPEC_K}], got {self.k}")
+        if not 1 <= self.ngram_min <= self.ngram_max:
+            raise ValueError(
+                f"need 1 <= ngram_min <= ngram_max, got "
+                f"({self.ngram_min}, {self.ngram_max})")
+        if self.method == "draft":
+            has_injected = self.draft_model is not None \
+                and self.draft_params is not None
+            if self.draft_arch is None and not has_injected:
+                raise ValueError(
+                    "speculation method 'draft' needs draft_arch (a registry "
+                    "config name) or an injected draft_model + draft_params")
+
+
+@dataclasses.dataclass
+class Proposal:
+    """One propose() result: per-row drafts (host or device (B, K) int32),
+    host draft lengths (rows may propose fewer than K; 0 = no drafts, the
+    verify step degrades to a plain decode step for that row), and — draft-
+    model proposers only — the device draft distribution q (B, K, V) that
+    rejection sampling scores against."""
+    drafts: object
+    draft_lens: np.ndarray
+    probs: object = None
+
+
+class Speculator:
+    """Proposer interface.  ``rows`` maps engine row -> (rid, context
+    token list, per-row draft cap); ``samp`` carries the host staging
+    arrays (greedy, temps, top_ks, top_ps) when the batch isn't all-greedy
+    (draft-model proposers sample their drafts under the same per-row
+    parameters the target uses)."""
+    k: int = 0
+
+    def propose(self, rows: dict, *, all_greedy: bool,
+                samp=None) -> Proposal:
+        raise NotImplementedError
+
+    def observe(self, row: int, rid: int, n_accepted: int) -> None:
+        """Verify outcome for a still-running row (draft-model proposers
+        advance their cache coverage bookkeeping here)."""
+
+    def invalidate(self, row: int) -> None:
+        """Row retired / preempted — drop any per-row state."""
+
+
+# --------------------------------------------------------------------- ngram
+def ngram_propose(ctx, k: int, ngram_max: int, ngram_min: int) -> list:
+    """Prompt-lookup proposal: find the longest suffix n-gram (length
+    ``ngram_max`` down to ``ngram_min``) of ``ctx`` that also occurs
+    earlier, and return up to ``k`` tokens of the *most recent* earlier
+    occurrence's continuation.  When the match overlaps the suffix (a
+    periodic tail — the classic greedy repetition loop), the continuation
+    reads through its own prediction, extrapolating the period to a full
+    ``k`` tokens instead of truncating at the end of the context.  Empty
+    list when nothing matches."""
+    if k <= 0:
+        return []
+    n_hi = min(ngram_max, len(ctx) - 1)
+    for n in range(n_hi, ngram_min - 1, -1):
+        pattern = ctx[-n:]
+        for i in range(len(ctx) - n - 1, -1, -1):
+            if ctx[i:i + n] == pattern:
+                ext = list(ctx)
+                for j in range(k):
+                    ext.append(ext[i + n + j])
+                return ext[len(ctx):]
+    return []
+
+
+class NGramSpeculator(Speculator):
+    """Model-free prompt-lookup proposer — suffix-match over the request's
+    own prompt + generated tokens.  Entirely host-side; proposes variable-
+    length drafts (often zero on non-repetitive text, which costs one
+    ordinary decode step)."""
+
+    def __init__(self, cfg: SpecConfig, batch_rows: int):
+        self.k = cfg.k
+        self.ngram_max = cfg.ngram_max
+        self.ngram_min = cfg.ngram_min
+        self.batch_rows = batch_rows
+
+    def propose(self, rows, *, all_greedy, samp=None) -> Proposal:
+        drafts = np.zeros((self.batch_rows, self.k), np.int32)
+        lens = np.zeros((self.batch_rows,), np.int32)
+        for row, (_rid, ctx, cap) in rows.items():
+            got = ngram_propose(ctx, min(self.k, cap),
+                                self.ngram_max, self.ngram_min)
+            drafts[row, :len(got)] = got
+            lens[row] = len(got)
+        return Proposal(drafts=drafts, draft_lens=lens)
+
+
+# --------------------------------------------------------------- draft model
+class DraftModelSpeculator(Speculator):
+    """Small-model proposer on its own slot-layout cache.
+
+    Per-row state is (rid, covered): ``covered`` counts context positions
+    written into the draft cache.  The invariant kept across verify steps is
+    ``covered ∈ {want, want - 1}`` where ``want = len(ctx) - 1`` (the last
+    context token is the next input, not yet written — same convention as
+    the target engine).  A one-token masked catch-up step closes the
+    deficit (it is exactly 1 when every draft accepted last round, because
+    the propose scan writes only K positions for K drafts); anything else —
+    fresh row, preemption gap, rid reuse — re-prefills the row from
+    scratch.  Proposing is one jitted ``lax.scan`` of K decode steps that
+    returns the drafts and (when sampling) the filtered draft distribution
+    q for rejection sampling; drafts never leave the device on this path.
+    """
+
+    def __init__(self, cfg: SpecConfig, model, params, batch_rows: int,
+                 max_len: int, *, kernels):
+        self.k = cfg.k
+        self.model, self.params = model, params
+        self.kernels = kernels
+        self.batch_rows = batch_rows
+        self.max_len = max_len
+        self.cache = model.init_cache(batch_rows, max_len,
+                                      dtype=jnp.float32)
+        self._row_rid = np.full((batch_rows,), -1, np.int64)
+        self._covered = np.zeros((batch_rows,), np.int64)
+        self._ctx_len = np.zeros((batch_rows,), np.int64)
+        self.rng = jax.random.key(cfg.draft_seed ^ 0x5BEC)
+
+        cpu = jax.default_backend() == "cpu"
+        donate = () if cpu else (1,)                    # draft cache tree
+        self._scan = jax.jit(
+            functools.partial(self._scan_impl, model, kernels, cfg.k),
+            static_argnames=("all_greedy",), donate_argnums=donate)
+        self._catchup = jax.jit(
+            functools.partial(self._catchup_impl, model, kernels),
+            donate_argnums=donate)
+        self._prefill = jax.jit(
+            functools.partial(self._prefill_impl, model, kernels),
+            donate_argnums=() if cpu else (2,))         # row sub-cache
+        self._read_row = jax.jit(self._read_row_impl)
+        self._write_row = jax.jit(self._write_row_impl,
+                                  donate_argnums=() if cpu else (0,))
+
+    # ------------------------------------------------------------ jitted fns
+    @staticmethod
+    def _scan_impl(model, kernels, k, params, cache, seq_lens, first, live,
+                   greedy, temps, top_ks, top_ps, keys, *,
+                   all_greedy: bool = False):
+        """K chained draft decode steps.  Writes K positions
+        ``[covered, covered + K)`` holding ``[ctx[-1], d_1 .. d_{K-1}]`` —
+        after the scan the draft cache covers the full context plus K - 1
+        speculative tokens.  Returns drafts (B, K) and, when sampling, the
+        filtered draft distribution q (B, K, V)."""
+        wl = live.astype(jnp.int32)
+        need_probs = not all_greedy
+
+        def body(carry, key):
+            cache, seq_lens, tok = carry
+            logits, cache, _ = model.apply(
+                params, {"tokens": tok}, kernels=kernels, cache=cache,
+                seq_lens=seq_lens, mode="decode", write_lens=wl)
+            lg = logits[:, -1]
+            seq_lens = seq_lens + wl
+            if all_greedy:
+                nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                q = jnp.zeros((), jnp.float32)
+            else:
+                lf = filter_logits(lg, temps, top_ks, top_ps)
+                q = jax.nn.softmax(lf, axis=-1)
+                rkeys = jax.random.split(key, lg.shape[0])
+                sampled = jax.vmap(
+                    lambda kk, row: jax.random.categorical(
+                        kk, row[None], axis=-1)[0])(rkeys, lf)
+                nxt = jnp.where(greedy,
+                                jnp.argmax(lg, axis=-1),
+                                sampled).astype(jnp.int32)
+            nxt = jnp.where(live, nxt, 0)
+            return (cache, seq_lens, nxt[:, None]), (nxt, q)
+
+        keys = jax.random.split(keys, k)
+        (cache, _, _), (drafts, qs) = jax.lax.scan(
+            body, (cache, seq_lens, first), keys)
+        drafts = jnp.transpose(drafts, (1, 0))              # (B, K)
+        probs = None if not need_probs else jnp.transpose(qs, (1, 0, 2))
+        return drafts, probs, cache
+
+    @staticmethod
+    def _catchup_impl(model, kernels, params, cache, seq_lens, tokens, wl):
+        """One masked decode step writing the deficit token for rows whose
+        coverage trails the context by one (write_lens 0 elsewhere)."""
+        _, cache, _ = model.apply(
+            params, {"tokens": tokens}, kernels=kernels, cache=cache,
+            seq_lens=seq_lens, mode="decode", write_lens=wl)
+        return cache
+
+    @staticmethod
+    def _prefill_impl(model, kernels, params, tokens, length, cache,
+                      seq_lens):
+        lengths = jnp.full((tokens.shape[0],), length, jnp.int32)
+        _, cache, _ = model.prefill(
+            params, {"tokens": tokens}, cache, seq_lens, kernels=kernels,
+            true_lengths=lengths)
+        return cache
+
+    @staticmethod
+    def _read_row_impl(cache, row):
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.dynamic_slice_in_dim(x, row, 1, axis=1)
+            if x.ndim >= 2 else x, cache)
+
+    @staticmethod
+    def _write_row_impl(cache, sub, row):
+        return jax.tree_util.tree_map(
+            lambda full, s: jax.lax.dynamic_update_slice_in_dim(
+                full, s.astype(full.dtype), row, axis=1)
+            if full.ndim >= 2 else s, cache, sub)
+
+    # ------------------------------------------------------------------ host
+    def _prefill_row(self, row: int, ctx_prefix) -> None:
+        """Bucketed re-prefill of one draft-cache row with ``ctx[:-1]``."""
+        from repro.serving.scheduler import bucket_len
+
+        n = len(ctx_prefix)
+        blen = min(bucket_len(n), self.max_len)
+        toks = np.zeros((1, blen), np.int32)
+        toks[0, :n] = ctx_prefix
+        sub = self._read_row(self.cache, jnp.asarray(row, jnp.int32))
+        sub = self._prefill(self.params, jnp.asarray(toks),
+                            jnp.asarray(n, jnp.int32), sub,
+                            jnp.zeros((1,), jnp.int32))
+        self.cache = self._write_row(self.cache, sub,
+                                     jnp.asarray(row, jnp.int32))
+
+    def propose(self, rows, *, all_greedy, samp=None) -> Proposal:
+        b = self.batch_rows
+        first = np.zeros((b, 1), np.int32)
+        live = np.zeros((b,), np.bool_)
+        for row, (rid, ctx, _cap) in rows.items():
+            want = len(ctx) - 1
+            if (self._row_rid[row] != rid
+                    or not 0 <= want - self._covered[row] <= 1):
+                self._prefill_row(row, ctx[:-1])
+                self._row_rid[row] = rid
+                self._covered[row] = want
+            first[row, 0] = ctx[-1]
+            live[row] = True
+            self._ctx_len[row] = len(ctx)
+
+        # catch-up: rows trailing the context by one feed ctx[-2] (the
+        # second-to-last accepted token) through a masked single-token step
+        cwl = np.zeros((b,), np.int32)
+        ctoks = np.zeros((b, 1), np.int32)
+        for row, (_rid, ctx, _cap) in rows.items():
+            if self._covered[row] == len(ctx) - 2:
+                ctoks[row, 0] = ctx[-2]
+                cwl[row] = 1
+        if cwl.any():
+            seq_cat = jnp.asarray(np.where(cwl > 0, self._covered, 0)
+                                  .astype(np.int32))
+            self.cache = self._catchup(
+                self.params, self.cache, seq_cat, jnp.asarray(ctoks),
+                jnp.asarray(cwl))
+            self._covered += cwl
+
+        seq = jnp.asarray(np.where(live, self._covered, 0).astype(np.int32))
+        self.rng, sub = jax.random.split(self.rng)
+        if all_greedy:
+            sarr = (None,) * 4
+        else:
+            greedy, temps, top_ks, top_ps = samp
+            sarr = (jnp.asarray(greedy), jnp.asarray(temps),
+                    jnp.asarray(top_ks), jnp.asarray(top_ps))
+        drafts, probs, self.cache = self._scan(
+            self.params, self.cache, seq, jnp.asarray(first),
+            jnp.asarray(live), *sarr, sub, all_greedy=all_greedy)
+        lens = np.zeros((b,), np.int32)
+        for row, (_rid, _ctx, cap) in rows.items():
+            lens[row] = min(self.k, cap)
+        return Proposal(drafts=drafts, draft_lens=lens, probs=probs)
+
+    def observe(self, row: int, rid: int, n_accepted: int) -> None:
+        if self._row_rid[row] != rid:
+            return
+        # scan wrote context + K-1 speculative tokens; accepted tokens up to
+        # that horizon are now verified context
+        self._covered[row] = self._ctx_len[row] + min(n_accepted, self.k - 1)
+
+    def invalidate(self, row: int) -> None:
+        self._row_rid[row] = -1
+        self._covered[row] = 0
+
+
+# ----------------------------------------------------------------- verify jit
+def verify_impl(model, kernels, params, first, drafts, draft_lens, cache,
+                seq_lens, block_tables, live, greedy, temps, top_ks, top_ps,
+                keys, draft_probs, *, all_greedy: bool = False):
+    """One batched verify pass — the engine jits this per layout.
+
+    ``first`` (B, 1) is each row's current input token, ``drafts`` (B, K)
+    the proposals.  The model scores all K + 1 positions in one forward
+    (the paged layout's multi-token decode routes through the chunked
+    ``paged_prefill`` kernel); ``write_lens = draft_lens + 1`` masks dead
+    rows and unproposed tail positions off the KV write path exactly like
+    bucketed-prefill padding.  ``accept_speculative`` picks the accepted
+    prefix + bonus, and rollback is the last line: ``seq_lens`` advances
+    only to the accepted position, never past it.
+
+    Returns ``(packed, cache, seq_lens)`` where ``packed`` (B, K + 2) int32
+    rows are ``[n_accepted | emitted_0 .. emitted_K]`` — the single
+    device→host transfer of the step.
+    """
+    tokens = jnp.concatenate([first, drafts], axis=1)
+    wl = jnp.where(live, draft_lens + 1, 0).astype(jnp.int32)
+    logits, cache, _ = model.apply(
+        params, {"tokens": tokens}, kernels=kernels, cache=cache,
+        seq_lens=seq_lens, mode="decode", block_tables=block_tables,
+        write_lens=wl)
+    n_acc, emitted = accept_speculative(
+        logits, drafts, draft_lens, keys, greedy=greedy, temps=temps,
+        top_ks=top_ks, top_ps=top_ps, draft_probs=draft_probs,
+        all_greedy=all_greedy)
+    n_acc = jnp.where(live, n_acc, 0)
+    emitted = jnp.where(live[:, None], emitted, 0)
+    seq_lens = jnp.where(live, seq_lens + n_acc + 1, 0)
+    packed = jnp.concatenate([n_acc[:, None], emitted], axis=1)
+    return packed.astype(jnp.int32), cache, seq_lens
+
+
+# -------------------------------------------------------------------- factory
+def make_speculator(spec: SpecConfig, model, config, *,
+                    kernels) -> Speculator:
+    """Build the proposer for an engine.  ``config`` is the ``EngineConfig``
+    (batch geometry); ``model`` the target model (vocab compatibility)."""
+    if spec.method == "ngram":
+        return NGramSpeculator(spec, config.batch_slots)
+
+    if spec.draft_model is not None:
+        dmodel, dparams = spec.draft_model, spec.draft_params
+    else:
+        from repro.configs import get_config, smoke_config
+        from repro.models import build_model
+
+        dcfg = smoke_config(spec.draft_arch) if spec.draft_smoke \
+            else get_config(spec.draft_arch)
+        dmodel = build_model(dcfg)
+        dparams = dmodel.init(jax.random.key(spec.draft_seed ^ 0xD9AF))
+    if dmodel.cfg.vocab_size != model.cfg.vocab_size:
+        raise ValueError(
+            f"draft model vocab ({dmodel.cfg.vocab_size}) must match the "
+            f"target vocab ({model.cfg.vocab_size})")
+    # headroom: paged targets can run to ceil(max_len/page)*page tokens, and
+    # the scan parks up to k - 1 speculative tokens past the covered context
+    cap = -(-config.max_len // config.page_size) * config.page_size
+    return DraftModelSpeculator(spec, dmodel, dparams, config.batch_slots,
+                                cap + spec.k + 1, kernels=kernels)

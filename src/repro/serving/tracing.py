@@ -102,6 +102,17 @@ class Tracer:
         self.complete("prefill", CAT_STEP, PID_ENGINE, TID_STEPS, t0, t1,
                       rid=rid, **args)
 
+    # speculative decoding (DESIGN.md §16): the two halves of one verify
+    # step on the engine track — proposal (speculator host/draft-model
+    # work) and the batched verify forward + accept/emit
+    def propose_span(self, t0: float, t1: float, **args):
+        self.complete("propose", CAT_STEP, PID_ENGINE, TID_STEPS, t0, t1,
+                      **args)
+
+    def verify_span(self, t0: float, t1: float, **args):
+        self.complete("verify", CAT_STEP, PID_ENGINE, TID_STEPS, t0, t1,
+                      **args)
+
     def request_state(self, rid: int, state: str, t: float, **args):
         """Move a request's lifecycle track to ``state`` at time ``t``:
         closes the previous state's span (if any) as an ``X`` slice and

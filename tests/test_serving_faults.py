@@ -6,6 +6,7 @@ Retry-After, 503), the engine-worker watchdog (no stream hangs on a stalled
 engine), the serving fault-injection harness, monitor-side heartbeat
 staleness, and quant-mode-seeded prefix-cache hashing."""
 import json
+import os
 import threading
 import time
 import urllib.error
@@ -28,8 +29,16 @@ from repro.serving.engine import Engine
 from repro.serving.http_api import make_server
 from repro.serving.kv_cache import PagedCache
 from repro.serving.sampler import SamplingParams
+from repro.serving.spec_decode import SpecConfig
 
 GREEDY = SamplingParams(greedy=True)
+
+# ISSUE 8 satellite: CI runs this suite a second time with REPRO_SPEC=1 so
+# the overload machinery (preemption, shedding, watchdog, fault injection)
+# is exercised composed with speculative decoding — greedy outputs are
+# token-identical either way, so every assertion below holds unchanged.
+_SPEC = (SpecConfig(method="ngram", k=2)
+         if os.environ.get("REPRO_SPEC") else None)
 
 
 @pytest.fixture(scope="module")
@@ -190,14 +199,15 @@ def test_preemption_round_trip_is_lossless(small_lm, kvq):
     pA, pB = _prompts(cfg, [24, 24], seed=3)
 
     roomy = EngineConfig(batch_slots=4, max_len=96, cache="paged",
-                         page_size=8, eos_id=-1, kv_quant=kvq)
+                         page_size=8, eos_id=-1, kv_quant=kvq,
+                         speculation=_SPEC)
     ref = Engine(model, params, roomy).generate(
         [pA, pB], max_new_tokens=12, sampling=GREEDY)
     ref = {o.rid: o.output for o in ref}
 
     tight = EngineConfig(batch_slots=4, max_len=96, cache="paged",
                          page_size=8, num_pages=6, eos_id=-1, kv_quant=kvq,
-                         preemption=True)
+                         preemption=True, speculation=_SPEC)
     eng = Engine(model, params, tight)
     ra = eng.submit(pA, max_new_tokens=12, sampling=GREEDY, priority=0)
     for _ in range(4):                        # A decodes a few tokens first
@@ -221,7 +231,8 @@ def test_preemption_never_targets_equal_or_higher_priority(small_lm):
     cfg, model, params = small_lm
     pA, pB = _prompts(cfg, [24, 24], seed=4)
     conf = EngineConfig(batch_slots=4, max_len=96, cache="paged",
-                        page_size=8, num_pages=6, eos_id=-1, preemption=True)
+                        page_size=8, num_pages=6, eos_id=-1, preemption=True,
+                        speculation=_SPEC)
     eng = Engine(model, params, conf)
     ra = eng.submit(pA, max_new_tokens=8, sampling=GREEDY, priority=1)
     for _ in range(2):
@@ -238,7 +249,8 @@ def test_abort_while_preempted_drops_checkpoint(small_lm):
     cfg, model, params = small_lm
     pA, pB = _prompts(cfg, [24, 24], seed=5)
     conf = EngineConfig(batch_slots=4, max_len=96, cache="paged",
-                        page_size=8, num_pages=6, eos_id=-1, preemption=True)
+                        page_size=8, num_pages=6, eos_id=-1, preemption=True,
+                        speculation=_SPEC)
     eng = Engine(model, params, conf)
     ra = eng.submit(pA, max_new_tokens=12, sampling=GREEDY, priority=0)
     for _ in range(4):
@@ -264,7 +276,7 @@ def test_bounded_admission_and_deadline_shed(small_lm):
     conf = EngineConfig(batch_slots=1, max_len=64, cache="paged",
                         page_size=8, num_pages=5, eos_id=-1, max_queued=2,
                         default_queue_timeout_s=5.0, clock=clk,
-                        preemption=False)
+                        preemption=False, speculation=_SPEC)
     eng = Engine(model, params, conf)
     ps = _prompts(cfg, [16] * 4, seed=6)
     r0 = eng.submit(ps[0], max_new_tokens=8, sampling=GREEDY)
@@ -295,7 +307,7 @@ def test_preempted_request_is_never_shed(small_lm):
     conf = EngineConfig(batch_slots=4, max_len=96, cache="paged",
                         page_size=8, num_pages=6, eos_id=-1,
                         default_queue_timeout_s=1.0, clock=clk,
-                        preemption=True)
+                        preemption=True, speculation=_SPEC)
     eng = Engine(model, params, conf)
     ra = eng.submit(pA, max_new_tokens=12, sampling=GREEDY, priority=0)
     for _ in range(4):
@@ -316,7 +328,7 @@ def test_fault_injector_page_seizure_defers_then_recovers(small_lm):
     inj = F.FaultInjector().exhaust_pages_at(0, 999).release_pages_at(6)
     conf = EngineConfig(batch_slots=2, max_len=64, cache="paged",
                         page_size=8, num_pages=6, eos_id=-1, faults=inj,
-                        preemption=False)
+                        preemption=False, speculation=_SPEC)
     eng = Engine(model, params, conf)
     rid = eng.submit(_prompts(cfg, [16], seed=8)[0], max_new_tokens=4,
                      sampling=GREEDY)
@@ -336,7 +348,8 @@ def test_fault_injector_mid_stream_abort(small_lm):
     cfg, model, params = small_lm
     inj = F.FaultInjector().abort_at(4, 0)
     conf = EngineConfig(batch_slots=2, max_len=64, cache="paged",
-                        page_size=8, eos_id=-1, faults=inj)
+                        page_size=8, eos_id=-1, faults=inj,
+                        speculation=_SPEC)
     eng = Engine(model, params, conf)
     rid = eng.submit(_prompts(cfg, [16], seed=9)[0], max_new_tokens=32,
                      sampling=GREEDY)
@@ -396,7 +409,8 @@ def overload_server(small_lm):
     inj = F.FaultInjector()
     eng = Engine(model, params, EngineConfig(
         batch_slots=1, max_len=64, cache="paged", page_size=8, num_pages=5,
-        eos_id=-1, max_queued=1, clock=clk, preemption=False))
+        eos_id=-1, max_queued=1, clock=clk, preemption=False,
+        speculation=_SPEC))
     inj.seize_pages(eng.pc, 5)
     srv = make_server(eng)
     threading.Thread(target=srv.serve_forever, daemon=True).start()
@@ -451,7 +465,7 @@ def test_http_watchdog_fails_stalled_streams(small_lm):
     inj.stall_at(2, stall)
     eng = Engine(model, params, EngineConfig(
         batch_slots=2, max_len=64, cache="paged", page_size=8, eos_id=-1,
-        clock=clk, faults=inj))
+        clock=clk, faults=inj, speculation=_SPEC))
     srv = make_server(eng, stall_timeout_s=10.0)
     threading.Thread(target=srv.serve_forever, daemon=True).start()
     try:
@@ -475,7 +489,7 @@ def test_overload_counters_account_for_every_request(small_lm):
     conf = EngineConfig(batch_slots=4, max_len=96, cache="paged",
                         page_size=8, num_pages=7, eos_id=-1, max_queued=3,
                         default_queue_timeout_s=6.0, clock=clk,
-                        preemption=True)
+                        preemption=True, speculation=_SPEC)
     eng = Engine(model, params, conf)
     prompts = _prompts(cfg, [24] * 6, seed=12)
     accepted, rejected = [], 0
