@@ -29,6 +29,8 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -77,6 +79,14 @@ CAP_BUDGET_PAGES_BF16 = 4
 SPEC_REQUESTS = 2
 SPEC_MAX_NEW = 96
 SPEC_K = 8
+# tensor-parallel scaling (DESIGN.md §17): greedy shared-prefix workload at
+# tp in {1,2,4} on a CPU-simulated 8-device mesh — run in a subprocess so
+# the host-platform device-count flag applies regardless of how the parent
+# bench process initialized jax
+TP_DEGREES = (1, 2, 4)
+TP_DEVICES = 8
+TP_MAX_NEW = 4
+TP_PREFIX_LEN = 20
 JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                          os.pardir, "BENCH_serving.json")
 
@@ -188,6 +198,68 @@ def _overload_run(cfg, model, params, kern, *, preemption: bool,
         "queue_wait_s": _hist_pct(m.queue_wait),
         "metrics": m.registry.snapshot(),
     }
+
+
+def _tp_child():
+    """TP-scaling subprocess entry: runs the greedy shared-prefix workload
+    through one engine per tp degree and prints the record list as JSON on
+    stdout.  Needs ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    exported before jax initializes (the parent sets it)."""
+    cfg = smoke_config("qwen3_4b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    qparams = quantize_params(params, None, GPTQConfig(group_size=32))
+    kern = L.KernelConfig(strategy=OPT4GPTQ, use_pallas=True,
+                          block_sizes=(8, 64, 64))
+    prefix = list(range(1, TP_PREFIX_LEN + 1))
+    prompts = [prefix + [100 + i] for i in range(N_REQUESTS)]
+    out, base = [], None
+    for tp in TP_DEGREES:
+        conf = EngineConfig(batch_slots=4, max_len=96, kernels=kern,
+                            eos_id=-1, cache="paged", page_size=16,
+                            mesh_shape=(tp,) if tp > 1 else None)
+        eng, outs, rec = _run_engine(model, qparams, conf, prompts,
+                                     TP_MAX_NEW)
+        rec = {"section": "tp_scaling", "layout": "paged",
+               "kv_quant": "fp32", "tp": tp,
+               "devices": len(jax.devices()),
+               "num_pages": eng.pc.num_pages,
+               "per_device_pool_bytes": MM.paged_cache_device_bytes(
+                   cfg, eng.pc.num_pages, eng.pc.page_size,
+                   dtype=eng.cache_dtype, kv_quant=eng.kv_quant, tp=tp),
+               "prefix_hit_pages": eng.stats.prefix_hit_pages,
+               "prefix_hit_tokens": eng.stats.prefix_hit_tokens, **rec}
+        if tp == 1:
+            base = outs
+        else:
+            rec["greedy_tokens_match_tp1"] = (
+                [o.output for o in outs] == [o.output for o in base])
+        out.append(rec)
+    json.dump(out, sys.stdout)
+
+
+def _tp_scaling_records() -> list[dict]:
+    """Run ``_tp_child`` in a subprocess with an 8-way host-device CPU mesh
+    and return its records (empty list + stderr passthrough on failure so a
+    broken TP path fails the CI schema gate, not the whole bench)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    env = dict(os.environ)
+    flag = f"--xla_force_host_platform_device_count={TP_DEVICES}"
+    prior = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in prior:
+        env["XLA_FLAGS"] = f"{prior} {flag}".strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(here, os.pardir, "src"),
+                    env.get("PYTHONPATH")) if p)
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         "import bench_serving; bench_serving._tp_child()"],
+        cwd=here, env=env, capture_output=True, text=True, timeout=1800)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stderr[-2000:])
+        return []
+    return json.loads(proc.stdout)
 
 
 def run(trace_out: str | None = None):
@@ -369,6 +441,22 @@ def run(trace_out: str | None = None):
             f"acc_per_vstep={rec['accepted_per_verify_step']:.2f}|"
             f"acceptance_rate={rec['acceptance_rate']:.2f}|"
             f"tok_per_s={rec['tok_per_s_interpret']:.2f}")
+
+    # ---- tensor-parallel scaling: tp 1/2/4 on an 8-way host mesh (§17) ----
+    # token-identical greedy output is the acceptance bar; per-device pool
+    # bytes shrink 1/tp at the same global page count (page ids are global,
+    # each device holds its num_kv_heads/tp head-slice of every page)
+    for rec in _tp_scaling_records():
+        records.append(rec)
+        match = ("" if rec["tp"] == 1 else
+                 f"|match_tp1={rec['greedy_tokens_match_tp1']}")
+        lines.append(
+            f"serving/tp{rec['tp']},"
+            f"{rec['wall_s'] * 1e6 / max(rec['tokens'], 1):.0f},"
+            f"tok_per_s={rec['tok_per_s_interpret']:.2f}|"
+            f"num_pages={rec['num_pages']}|"
+            f"per_dev_pool_B={rec['per_device_pool_bytes']}|"
+            f"prefix_hit_pages={rec['prefix_hit_pages']}{match}")
 
     try:
         with open(JSON_PATH, "w") as f:

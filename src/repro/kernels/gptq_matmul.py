@@ -224,6 +224,20 @@ def gptq_matmul(x: jnp.ndarray, qweight: jnp.ndarray, scales: jnp.ndarray,
     bm, bn, bk = resolve_block_sizes(m, k, n, group_size, bm, bn, bk)
     qweight, scales, qzeros, n_pad = pad_cols(qweight, scales, qzeros, n, bn)
     gk = _scale_block(bk, g)
+    # scales/qzeros row *block* index for K-step ki: BlockSpec index maps
+    # count in blocks of gk rows, so the group-row element offset ki*bk//g
+    # must be divided by the block height — ki when bk >= g (each K block
+    # owns its own gk group rows), ki*bk//g when bk < g (several K blocks
+    # share one group row).  The previous ki*bk//g element-offset form read
+    # the wrong group rows whenever gk > 1 and K spanned > 2 blocks
+    # (interpret-mode index clamping masked it at 2).
+    sdiv = g * gk
+
+    def _s_inner(mi, ni, ki):
+        return (ki * bk // sdiv, ni)
+
+    def _s_outer(ki, mi, ni):
+        return (ki * bk // sdiv, ni)
 
     m_pad = _round_up(m, bm)
     if m_pad != m:
@@ -248,8 +262,9 @@ def gptq_matmul(x: jnp.ndarray, qweight: jnp.ndarray, scales: jnp.ndarray,
             in_specs=[
                 pl.BlockSpec((bk // NIB, bn) if strategy.packed_loads else (bk, bn),
                              lambda ki, ni: (ki, ni)),
-                pl.BlockSpec((gk, bn), lambda ki, ni: (ki * bk // g, ni)),
-                pl.BlockSpec((gk, bn // NIB), lambda ki, ni: (ki * bk // g, ni)),
+                pl.BlockSpec((gk, bn), lambda ki, ni: (ki * bk // sdiv, ni)),
+                pl.BlockSpec((gk, bn // NIB),
+                             lambda ki, ni: (ki * bk // sdiv, ni)),
             ],
             out_specs=pl.BlockSpec((bk, bn), lambda ki, ni: (ki, ni)),
             out_shape=jax.ShapeDtypeStruct((k, n_pad), jnp.bfloat16),
@@ -277,8 +292,8 @@ def gptq_matmul(x: jnp.ndarray, qweight: jnp.ndarray, scales: jnp.ndarray,
             in_specs=[
                 pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
                 qw_spec_inner,
-                pl.BlockSpec((gk, bn), lambda mi, ni, ki: (ki * bk // g, ni)),
-                pl.BlockSpec((gk, bn // NIB), lambda mi, ni, ki: (ki * bk // g, ni)),
+                pl.BlockSpec((gk, bn), _s_inner),
+                pl.BlockSpec((gk, bn // NIB), _s_inner),
             ],
             out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
             out_shape=out_shape,
@@ -293,8 +308,8 @@ def gptq_matmul(x: jnp.ndarray, qweight: jnp.ndarray, scales: jnp.ndarray,
             in_specs=[
                 pl.BlockSpec((bm, bk), lambda ki, mi, ni: (mi, ki)),
                 qw_spec_outer,
-                pl.BlockSpec((gk, bn), lambda ki, mi, ni: (ki * bk // g, ni)),
-                pl.BlockSpec((gk, bn // NIB), lambda ki, mi, ni: (ki * bk // g, ni)),
+                pl.BlockSpec((gk, bn), _s_outer),
+                pl.BlockSpec((gk, bn // NIB), _s_outer),
             ],
             out_specs=pl.BlockSpec((bm, bn), lambda ki, mi, ni: (mi, ni)),
             out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), jnp.float32),

@@ -2,7 +2,10 @@
 device state must not be touched at import time)."""
 from __future__ import annotations
 
+import math
+
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -13,8 +16,40 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
-    """Arbitrary mesh (tests / small-scale runs)."""
+    """Arbitrary mesh (tests / small-scale runs).  Raises a ``ValueError``
+    naming the requested shape and the available device count when they
+    don't match, instead of surfacing a raw jax reshape error."""
+    need = math.prod(shape)
+    avail = len(jax.devices())
+    if need != avail:
+        raise ValueError(
+            f"mesh shape {tuple(shape)} needs {need} devices but "
+            f"{avail} are available; on CPU, set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            f"before jax initializes (or use make_host_mesh for a "
+            f"subset-sized 1-D mesh)")
     axis_type = getattr(jax.sharding, "AxisType", None)
     if axis_type is None:
         return jax.make_mesh(shape, axes)
     return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
+def make_host_mesh(n: int, axes: tuple[str, ...] = ("model",)):
+    """1-D mesh over the first ``n`` local devices — the CPU-simulated
+    mesh tensor-parallel serving tests run on (``n`` may be smaller than
+    the device count, unlike ``make_mesh``).  Host runs need
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` exported before
+    jax initializes."""
+    if n <= 0:
+        raise ValueError(f"host mesh size must be >= 1, got {n}")
+    if len(axes) != 1:
+        raise ValueError(f"make_host_mesh builds 1-D meshes, got axes "
+                         f"{tuple(axes)}")
+    devices = jax.devices()
+    if n > len(devices):
+        raise ValueError(
+            f"host mesh of {n} devices requested but only {len(devices)} "
+            f"are available; set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} before "
+            f"jax initializes")
+    return jax.sharding.Mesh(np.asarray(devices[:n]), tuple(axes))

@@ -62,13 +62,18 @@ def build_engine(args):
         spec = SpecConfig(method=args.speculate, k=args.spec_k,
                           draft_arch=args.draft_arch,
                           draft_smoke=args.smoke)
+    tp = getattr(args, "tp", 1) or 1
     eng = Engine(model, qparams, EngineConfig(
         batch_slots=args.slots, max_len=args.max_len, kernels=kern,
         eos_id=-1, cache=args.cache, page_size=args.page_size,
         kv_quant=args.kv_quant, max_queued=args.max_queued,
         default_queue_timeout_s=args.queue_timeout,
         metrics=not args.no_metrics, tracer=tracer,
-        speculation=spec, prefix_cache_path=args.prefix_cache))
+        speculation=spec, prefix_cache_path=args.prefix_cache,
+        mesh_shape=(tp,) if tp > 1 else None))
+    if tp > 1:
+        log_event(args, "tensor_parallel", tp=tp,
+                  devices=len(jax.devices()))
     return cfg, eng
 
 
@@ -179,6 +184,11 @@ def main(argv=None):
                     help="KV layout: fixed slots or PagedAttention block "
                          "tables (DESIGN.md §10)")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree (DESIGN.md §17): shard "
+                         "GPTQ weights and the KV page pools across this "
+                         "many devices (paged cache only; page budget is "
+                         "per device)")
     ap.add_argument("--kv-quant", choices=("fp32", "bf16", "int8"),
                     default=None, dest="kv_quant",
                     help="KV-cache storage: fp passthrough or int8 with "

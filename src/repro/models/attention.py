@@ -306,7 +306,11 @@ def gqa_apply(p, x, *, cfg: ModelConfig, kernels=L.DEFAULT_KERNELS,
         if ksl is not None:
             new_cache.update(k_scale=ksl, v_scale=vsl)
     out = out.reshape(b, s, cfg.num_heads * hd)
-    return L.linear(p["wo"], out, name="wo", kernels=kernels), new_cache
+    # row-parallel epilogue (DESIGN.md §17): under tensor-parallel serving
+    # each device holds its head-slice of wo's K axis, so the projection is
+    # a partial sum until the psum completes it; identity otherwise
+    return L.tp_all_reduce(
+        L.linear(p["wo"], out, name="wo", kernels=kernels)), new_cache
 
 
 # ------------------------------------------------------------------------- MLA

@@ -32,7 +32,11 @@ def ffn_apply(p, x, *, cfg: ModelConfig, kernels=L.DEFAULT_KERNELS):
                      L.linear(p["w_up"], x, name="w_up", kernels=kernels))
     else:
         h = L.squared_relu(L.linear(p["w_up"], x, name="w_up", kernels=kernels))
-    return L.linear(p["w_down"], h, name="w_down", kernels=kernels)
+    # row-parallel epilogue (DESIGN.md §17): w_down's K axis (d_ff) is the
+    # sharded gate/up output under tensor-parallel serving — psum completes
+    # the partial matmul; identity when no TP axis is armed
+    return L.tp_all_reduce(
+        L.linear(p["w_down"], h, name="w_down", kernels=kernels))
 
 
 def _expert_weights(w, dtype):

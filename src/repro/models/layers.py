@@ -111,6 +111,40 @@ def moe_ep_context():
     return _MOE_EP
 
 
+# shard_map tensor-parallel epilogue (serving/parallel.py, DESIGN.md §17):
+# armed at trace time inside the shard_map body.  When set, row-parallel
+# linears (wo / w_down) hold K-shards, so their partial matmul outputs are
+# completed with a psum over the named TP axis; unset (the default), the
+# epilogue is the identity and single-device traces are untouched.
+_TP_AXIS = None
+
+
+class tp_epilogue:
+    """``with L.tp_epilogue(axis): model.apply(...)`` — inside a shard_map
+    body only; nests/restores like a dynamic scope."""
+
+    def __init__(self, axis: str):
+        self.axis = axis
+
+    def __enter__(self):
+        global _TP_AXIS
+        self._prev = _TP_AXIS
+        _TP_AXIS = self.axis
+        return self
+
+    def __exit__(self, *exc):
+        global _TP_AXIS
+        _TP_AXIS = self._prev
+        return False
+
+
+def tp_all_reduce(y):
+    """Row-parallel all-reduce epilogue: psum when a TP axis is armed."""
+    if _TP_AXIS is None:
+        return y
+    return jax.lax.psum(y, _TP_AXIS)
+
+
 def constrain_act(x):
     if _ACT_SPEC is None or x.ndim != 3:
         return x

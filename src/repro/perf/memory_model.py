@@ -150,6 +150,25 @@ def paged_cache_bytes(cfg: ModelConfig, num_pages: int, page_size: int, *,
                          kv_quant=kv_quant) * (num_pages + 1)
 
 
+def paged_cache_device_bytes(cfg: ModelConfig, num_pages: int,
+                             page_size: int, *, dtype=jnp.float32,
+                             kv_quant=None, tp: int = 1) -> int:
+    """Per-device paged-KV bytes under ``tp``-way tensor parallelism
+    (DESIGN.md §17): every device holds the ``num_kv_heads/tp`` head-slice
+    of the same global page ids, so one device's pool is ``1/tp`` of the
+    single-device footprint at the same page count — equivalently, the same
+    per-device byte budget buys ``tp×`` the pages.  ``kv_quant`` accepts a
+    ``KVQuantConfig`` or the CLI string form (``"bf16"``/``"int8"``)."""
+    if isinstance(kv_quant, str):
+        kv_quant = KQ.KVQuantConfig(dtype=kv_quant)
+    if cfg.num_kv_heads % tp:
+        raise ValueError(
+            f"num_kv_heads={cfg.num_kv_heads} does not divide tp={tp}")
+    return KQ.page_bytes(cfg.num_layers, cfg.num_kv_heads // tp,
+                         cfg.head_dim, page_size, dtype=dtype,
+                         kv_quant=kv_quant) * (num_pages + 1)
+
+
 def host_offload_bytes(cfg: ModelConfig, n_pages: int, page_size: int, *,
                        dtype=jnp.float32, kv_quant=None) -> int:
     """Host bytes one preempted sequence's checkpoint holds: its private

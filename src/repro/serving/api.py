@@ -125,6 +125,16 @@ class EngineConfig:
     # engine loads it at construction when the directory exists and
     # ``Engine.save_prefix_cache()`` writes it
     prefix_cache_path: str | None = None
+    # ---- tensor parallelism (DESIGN.md §17) ----
+    # device mesh this engine spans (serving/parallel.py): None or (1,) is
+    # today's single-device engine, (N,) shards GPTQ weights head-/N-major
+    # and the KV page pools per device with shard_map around the paged
+    # kernels.  Paged layout only; page budgets (num_pages /
+    # page_pool_bytes) are interpreted *per device* — each device's pool
+    # holds its head-slice of the same global page ids
+    mesh_shape: tuple | None = None
+    # mesh axis name the row-parallel all-reduce epilogue psums over
+    tp_axis: str = "model"
 
     def __post_init__(self):
         if self.batch_slots <= 0:
@@ -195,6 +205,34 @@ class EngineConfig:
             raise ValueError(
                 f"prefix_cache_path must be a directory path string, got "
                 f"{self.prefix_cache_path!r}")
+        if self.mesh_shape is not None:
+            dims = tuple(self.mesh_shape)
+            if not dims or any(not isinstance(d, int) or d <= 0
+                               for d in dims):
+                raise ValueError(
+                    f"mesh_shape must be a non-empty tuple of positive "
+                    f"ints, got {self.mesh_shape!r}")
+            object.__setattr__(self, "mesh_shape", dims)
+            tp = 1
+            for d in dims:
+                tp *= d
+            if tp > 1:
+                if layout == "slot" or (layout is None and getattr(
+                        self.kernels.cache_layout, "value",
+                        self.kernels.cache_layout) == "slot"):
+                    raise ValueError(
+                        "tensor-parallel serving shards the KV page pools "
+                        "— cache='paged' required with mesh_shape "
+                        f"{dims}")
+                if self.speculation is not None:
+                    raise ValueError(
+                        "speculative decoding is not supported under "
+                        "tensor parallelism yet (mesh_shape "
+                        f"{dims} with speculation)")
+        if not self.tp_axis or not isinstance(self.tp_axis, str):
+            raise ValueError(
+                f"tp_axis must be a non-empty axis name, got "
+                f"{self.tp_axis!r}")
 
 
 @dataclasses.dataclass

@@ -73,6 +73,7 @@ from repro.models import LM
 from repro.serving import clock as CLK
 from repro.serving import kv_cache as KV
 from repro.serving import kv_quant as KQ
+from repro.serving import parallel as PL
 from repro.serving import spec_decode as SD
 from repro.serving.api import (EngineConfig, FinishReason, QueueFullError,
                                RequestOutput, RequestState, StreamEvent)
@@ -274,6 +275,19 @@ class Engine:
             raise ValueError(
                 "page_pool_bytes applies to the paged cache layout only")
 
+        # ---- tensor parallelism (DESIGN.md §17) ----
+        self.tp = PL.mesh_size(config.mesh_shape)
+        self._tp_ctx = None
+        if self.tp > 1:
+            if self.layout != "paged":
+                raise ValueError(
+                    "tensor-parallel serving shards the KV page pools — "
+                    "the slot layout is single-device (cache='paged')")
+            # validates head divisibility / GQA-only / act-order and builds
+            # the mesh + local model + parameter PartitionSpecs
+            self._tp_ctx = PL.build_tp_context(model, params, self.tp,
+                                               config.tp_axis)
+
         # observability (DESIGN.md §15): one registry per engine, stamped
         # with the cache layout + kv-quant mode as constant labels;
         # EngineStats is a thin read-view over the same counters /metrics
@@ -289,9 +303,14 @@ class Engine:
             max_pages = -(-max_len // page_size)
             if config.page_pool_bytes is not None:
                 # byte-budget-derived pool: int8 KV buys ~2x (vs bf16) / ~4x
-                # (vs fp32) the pages — i.e. deeper continuous batching
+                # (vs fp32) the pages — i.e. deeper continuous batching.
+                # Under tensor parallelism the budget is *per device*: each
+                # device's pool holds its num_kv_heads/tp head-slice, so the
+                # same byte budget buys tp× the pages (capacity scales with
+                # devices, the whole point of DESIGN.md §17)
                 num_pages = KQ.num_pages_for_budget(
-                    config.page_pool_bytes, cfg.num_layers, cfg.num_kv_heads,
+                    config.page_pool_bytes, cfg.num_layers,
+                    cfg.num_kv_heads // self.tp,
                     cfg.head_dim, page_size, dtype=cache_dtype, kv_quant=kvq)
             elif num_pages is None:
                 num_pages = KQ.default_num_pages(batch_slots, max_len,
@@ -308,6 +327,18 @@ class Engine:
             self.cache = model.init_paged_cache(num_pages, page_size,
                                                 dtype=cache_dtype,
                                                 kv_quant=kvq)
+            if self._tp_ctx is not None:
+                # head-shard the pools and the GPTQ weights; page *ids*
+                # stay global, so the PagedCache bookkeeping above (free
+                # lists, refcounts, COW, prefix index) is unchanged
+                self.cache = PL.shard_cache(self._tp_ctx, self.cache)
+                self.params = PL.shard_params(self._tp_ctx, self.params)
+            # per-device pool accounting for the device-labeled gauges
+            self.metrics.configure_devices(
+                self.tp,
+                KQ.page_bytes(cfg.num_layers, cfg.num_kv_heads // self.tp,
+                              cfg.head_dim, page_size, dtype=cache_dtype,
+                              kv_quant=kvq) * (num_pages + 1))
             self.slots = None
         else:
             self.slots = KV.SlotCache(model, batch_slots, max_len,
@@ -322,17 +353,31 @@ class Engine:
         # reference.  CPU has no donation support (it would only warn), so
         # gate on the backend.
         cpu = jax.default_backend() == "cpu"
-        self._decode = jax.jit(
-            functools.partial(self._decode_impl, self.model, self.kernels),
-            static_argnames=("all_greedy",),
-            donate_argnums=() if cpu else (2, 3))       # cache, seq_lens
+        if self._tp_ctx is not None:
+            # shard_map entry points (serving/parallel.py): same impls, same
+            # operand positions, traced against the per-device local model
+            self._decode = jax.jit(
+                PL.tp_wrap_decode(self._tp_ctx, self.kernels,
+                                  self._decode_impl),
+                static_argnames=("all_greedy",),
+                donate_argnums=() if cpu else (2, 3))   # cache, seq_lens
+            self._prefill_paged = jax.jit(
+                PL.tp_wrap_prefill_paged(self._tp_ctx, self.kernels,
+                                         self._prefill_paged_impl),
+                donate_argnums=() if cpu else (3,))     # paged cache tree
+        else:
+            self._decode = jax.jit(
+                functools.partial(self._decode_impl, self.model,
+                                  self.kernels),
+                static_argnames=("all_greedy",),
+                donate_argnums=() if cpu else (2, 3))   # cache, seq_lens
+            self._prefill_paged = jax.jit(
+                functools.partial(self._prefill_paged_impl, self.model,
+                                  self.kernels),
+                donate_argnums=() if cpu else (3,))     # paged cache tree
         self._prefill = jax.jit(
             functools.partial(self._prefill_impl, self.model, self.kernels),
             donate_argnums=() if cpu else (3,))         # slot sub-cache
-        self._prefill_paged = jax.jit(
-            functools.partial(self._prefill_paged_impl, self.model,
-                              self.kernels),
-            donate_argnums=() if cpu else (3,))         # paged cache tree
         self._read_slot = jax.jit(self._read_slot_impl)
         self._write_slot = jax.jit(self._write_slot_impl,
                                    donate_argnums=() if cpu else (0,))

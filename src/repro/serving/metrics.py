@@ -557,6 +557,24 @@ class EngineMetrics:
         self.offloaded_bytes_current = r.gauge(
             "engine_offloaded_bytes_current",
             "Host bytes currently held by preemption checkpoints")
+        # per-device pool gauges (DESIGN.md §17): under tensor parallelism
+        # every device owns the num_kv_heads/tp head-slice of the same
+        # global page ids, so /metrics exposes pool skew (or, today, its
+        # absence — the replicated free list keeps the shards in lockstep)
+        # per shard instead of one aggregate
+        self.page_pool_device_free = r.gauge(
+            "engine_page_pool_device_free_pages",
+            "Pages on the free list, by mesh device", labels=("device",))
+        self.page_pool_device_bytes = r.gauge(
+            "engine_page_pool_device_bytes",
+            "Page-pool bytes resident on one mesh device (head-slice of "
+            "payload + scale pools)", labels=("device",))
+        self.offloaded_bytes_device = r.gauge(
+            "engine_offloaded_bytes_device",
+            "Host checkpoint bytes attributable to one mesh device's "
+            "head-slice", labels=("device",))
+        self._devices = 1
+        self._device_pool_bytes = 0
         # histograms (explicit buckets, DESIGN.md §15) ----------------------
         self.ttft = r.histogram(
             "engine_ttft_seconds", "Time to first token, by priority class",
@@ -578,6 +596,13 @@ class EngineMetrics:
             "Accepted-draft-prefix length per request per verify step",
             SPEC_ACCEPT_BUCKETS)
 
+    def configure_devices(self, n: int, pool_bytes_per_device: int) -> None:
+        """Declare the mesh size (1 on a single device) and each device's
+        resident pool bytes so ``sync_pool`` can fan the occupancy out to
+        the device-labeled gauges.  Called once at engine construction."""
+        self._devices = max(1, int(n))
+        self._device_pool_bytes = int(pool_bytes_per_device)
+
     def sync_pool(self, pc) -> None:
         """Refresh the page-pool occupancy/offload gauges from a
         ``PagedCache`` (``occupancy()``) — called once per step."""
@@ -586,6 +611,16 @@ class EngineMetrics:
         self.page_pool_free.set(occ["free_pages"])
         self.page_pool_utilization.set(occ["utilization"])
         self.offloaded_bytes_current.set(occ["offloaded_bytes"])
+        # per-device fan-out: the free list is replicated bookkeeping (page
+        # ids are global, every device holds its head-slice of every page),
+        # and a checkpointed page's host bytes split evenly across shards
+        for d in range(self._devices):
+            self.page_pool_device_free.labels(device=d).set(
+                occ["free_pages"])
+            self.page_pool_device_bytes.labels(device=d).set(
+                self._device_pool_bytes)
+            self.offloaded_bytes_device.labels(device=d).set(
+                occ["offloaded_bytes"] / self._devices)
 
 
 def make_engine_metrics(layout: str, kv_quant: str,

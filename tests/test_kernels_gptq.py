@@ -107,6 +107,26 @@ def test_strategies_numerics_preserving_pairwise():
                                    err_msg=f"strategy {name} diverged")
 
 
+@pytest.mark.parametrize("k,bk,g", [(256, 64, 32), (512, 64, 32),
+                                    (512, 128, 64)])
+def test_scale_block_indexing_many_k_blocks(k, bk, g):
+    """Regression: with ``bk > group_size`` and more than two K blocks the
+    scales/qzeros BlockSpec index maps must advance one gk-row block per K
+    step.  The old element-offset form (``ki*bk//g``) double-counted the
+    block height and read the wrong group rows; interpret-mode index
+    clamping hid it whenever K spanned <= 2 blocks."""
+    w, ql = _make_quant(k, 128, g, seed=21)
+    x = jnp.asarray(np.random.default_rng(7).normal(size=(17, k)).astype(np.float32))
+    y_ref = ops.gptq_linear(ql, x, use_pallas=False)
+    for name in ("opt4gptq", "naive"):  # naive covers the dequant-pass specs
+        y_k = ops.gptq_linear(ql, x, strategy=get_strategy(name),
+                              use_pallas=True, block_sizes=(8, 64, bk))
+        atol = 1e-1 if name == "naive" else 2e-2
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref),
+                                   rtol=2e-2, atol=atol,
+                                   err_msg=f"strategy {name}")
+
+
 @given(st.integers(1, 3), st.integers(1, 2), st.integers(0, 10_000))
 @settings(max_examples=8, deadline=None)
 def test_property_random_shapes(mw, nw, seed):
