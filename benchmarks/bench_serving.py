@@ -11,7 +11,10 @@ contiguous-gather prefill vs the fused chunked paged-prefill kernel, plus
 (ISSUE 8) the speculative-decoding on/off comparison: the n-gram speculator
 over a repetitive-suffix greedy workload, recording acceptance rate,
 accepted tokens per verify step, tokens per engine step and the tok/s +
-step-count ratios against plain decode (token-identical output required).
+step-count ratios against plain decode (token-identical output required),
+plus (ISSUE 10) the chunked-prefill fusion comparison: hi-priority TTFT and
+decode throughput under long-prompt load with the token-budgeted fused step
+on (``max_step_tokens`` set) vs off (unbudgeted whole-prompt chunks).
 
 Interpret-mode wall-clock on CPU: the numbers validate the serving harness
 and track the *relative* slot-vs-paged / bf16-vs-int8 trajectory across PRs,
@@ -79,6 +82,25 @@ CAP_BUDGET_PAGES_BF16 = 4
 SPEC_REQUESTS = 2
 SPEC_MAX_NEW = 96
 SPEC_K = 8
+# chunked-prefill fusion experiment (ISSUE 10): long low-priority prompts
+# arriving under a stream of short high-priority requests, driven on a
+# ManualClock whose per-step advance is proportional to the tokens the step
+# processed (CP_S_PER_TOKEN simulated s/token + CP_STEP_OVERHEAD_S launch
+# overhead) — so an unbudgeted whole-prompt prefill step stalls every other
+# stream for its full prompt length, while the token-budgeted fused step
+# bounds each stall at max_step_tokens.  Slots/pages are sized so nothing
+# queues on capacity: the measured hi-priority TTFT gap is purely the
+# prefill-stall policy.  Decode tok/s per simulated second checks fusion
+# does not cost throughput.
+CP_BUDGET = 32             # max_step_tokens with fusion on
+CP_LONG_LEN = 96
+CP_LONG_MAX_NEW = 8
+CP_LONG_ARRIVALS = (0.0, 10.0)
+CP_SHORT_LEN = 8
+CP_SHORT_MAX_NEW = 4
+CP_N_SHORT = 6             # hi-prio shorts, one every 2.5 simulated s
+CP_S_PER_TOKEN = 0.25
+CP_STEP_OVERHEAD_S = 0.25
 # tensor-parallel scaling (DESIGN.md §17): greedy shared-prefix workload at
 # tp in {1,2,4} on a CPU-simulated 8-device mesh — run in a subprocess so
 # the host-platform device-count flag applies regardless of how the parent
@@ -198,6 +220,64 @@ def _overload_run(cfg, model, params, kern, *, preemption: bool,
         "queue_wait_s": _hist_pct(m.queue_wait),
         "metrics": m.registry.snapshot(),
     }
+
+
+def _chunked_prefill_run(cfg, model, params, kern, *,
+                         budget: int | None) -> tuple[list, dict]:
+    """One fusion-on/off run of the long-prefill-under-decode workload.
+    Simulated time advances ``CP_STEP_OVERHEAD_S + 1s/token`` per step, so
+    TTFT percentiles measure scheduling policy (how long a long prompt's
+    prefill can stall the step), not CPU interpret speed."""
+    rng = np.random.default_rng(13)
+    work = [(t, rng.integers(2, cfg.vocab_size, size=CP_LONG_LEN).tolist(),
+             0, CP_LONG_MAX_NEW) for t in CP_LONG_ARRIVALS]
+    work += [(2.5 * (i + 1),
+              rng.integers(2, cfg.vocab_size, size=CP_SHORT_LEN).tolist(),
+              1, CP_SHORT_MAX_NEW) for i in range(CP_N_SHORT)]
+    work.sort(key=lambda w: w[0])
+
+    clk = ManualClock(0.0)
+    conf = EngineConfig(batch_slots=8, max_len=160, kernels=kern, eos_id=-1,
+                        cache="paged", page_size=16, num_pages=48, clock=clk,
+                        max_step_tokens=budget)
+    eng = Engine(model, params, conf)
+    outs, nxt, steps = [], 0, 0
+    while (nxt < len(work) or not eng.sched.idle) and steps < 500:
+        while nxt < len(work) and work[nxt][0] <= clk.now():
+            _, prompt, prio, max_new = work[nxt]
+            eng.submit(prompt, max_new_tokens=max_new, ignore_eos=True,
+                       priority=prio)
+            nxt += 1
+        # bill the step's token cost *before* running it, so first tokens
+        # are stamped at the step's end, not its start: admit now (so the
+        # plan is final — ``step`` finds nothing new to admit), read the
+        # pure chunk plan, and advance the clock by the tokens it will
+        # process (each decode row emits exactly one token without
+        # speculation).
+        eng._admit(outs)
+        plan = eng.sched.plan_chunks(budget)
+        n_decode = sum(not a.pending_prefill
+                       for a in eng.sched.active.values())
+        clk.advance(CP_STEP_OVERHEAD_S + CP_S_PER_TOKEN *
+                    (n_decode + sum(plan.values())))
+        outs.extend(eng.step())
+        eng._events.clear()
+        steps += 1
+    m, s = eng.metrics, eng.stats
+    hi_h = m.ttft.labels(priority="1")
+    rec = {
+        "section": "chunked_prefill", "layout": "paged",
+        "max_step_tokens": budget, "requests": len(work), "steps": steps,
+        "sim_s": clk.now(), "tokens": s.tokens_generated,
+        "prefill_tokens": s.prefill_tokens,
+        "decode_tok_per_sim_s": s.tokens_generated / max(clk.now(), 1e-9),
+        "ttft_s": _hist_pct(m.ttft),
+        "ttft_hi_s": _hist_pct(hi_h if hi_h.count else m.ttft),
+        "latency_s": _hist_pct(m.request_latency),
+        "queue_wait_s": _hist_pct(m.queue_wait),
+        "metrics": m.registry.snapshot(),
+    }
+    return outs, rec
 
 
 def _tp_child():
@@ -441,6 +521,34 @@ def run(trace_out: str | None = None):
             f"acc_per_vstep={rec['accepted_per_verify_step']:.2f}|"
             f"acceptance_rate={rec['acceptance_rate']:.2f}|"
             f"tok_per_s={rec['tok_per_s_interpret']:.2f}")
+
+    # ---- chunked prefill: fused token-budgeted step on/off (ISSUE 10) ----
+    # fusion off = unbudgeted whole-prompt chunks (the old two-program
+    # engine's stall profile); fusion on = max_step_tokens-budgeted chunks
+    # interleaved with decode rows in one fused step.  The CI schema gate
+    # checks hi-prio p99 TTFT (on <= off) and decode throughput (within 5%).
+    cp_base = None
+    for budget in (None, CP_BUDGET):
+        outs, rec = _chunked_prefill_run(cfg, model, qparams, kern,
+                                         budget=budget)
+        if budget is None:
+            cp_base = (outs, rec)
+        else:
+            base_outs, base_rec = cp_base
+            key = lambda os_: sorted((o.rid, tuple(o.output)) for o in os_)
+            rec["greedy_tokens_match_unbudgeted"] = key(outs) == key(base_outs)
+            rec["decode_tok_per_s_ratio_vs_unbudgeted"] = (
+                rec["decode_tok_per_sim_s"]
+                / max(base_rec["decode_tok_per_sim_s"], 1e-9))
+        records.append(rec)
+        tag = "off" if budget is None else "on"
+        lines.append(
+            f"serving/chunked_prefill_{tag},{rec['steps']},"
+            f"hi_ttft_p50_s={rec['ttft_hi_s']['p50']:.1f}|"
+            f"hi_ttft_p99_s={rec['ttft_hi_s']['p99']:.1f}|"
+            f"ttft_p99_s={rec['ttft_s']['p99']:.1f}|"
+            f"decode_tok_per_sim_s={rec['decode_tok_per_sim_s']:.3f}|"
+            f"sim_s={rec['sim_s']:.0f}")
 
     # ---- tensor-parallel scaling: tp 1/2/4 on an 8-way host mesh (§17) ----
     # token-identical greedy output is the acceptance bar; per-device pool

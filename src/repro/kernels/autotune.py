@@ -191,6 +191,28 @@ def _save_file(path: str, data: dict) -> None:
     os.replace(tmp, path)
 
 
+def _q_chunk_lookup(key: str, path: str | None, tune) -> int:
+    """Shared memory -> JSON file -> tune cache walk for scalar entries."""
+    path = path or cache_path()
+    mem_key = f"{path}|{key}"
+    hit = _MEM.get(mem_key)
+    if hit is not None:
+        return int(hit)
+    data = _load_file(path)
+    if key in data:
+        val = int(data[key])
+    else:
+        val = int(tune())
+        data = _load_file(path)                  # re-read: concurrent writers
+        data[key] = val
+        try:
+            _save_file(path, data)
+        except OSError:
+            pass                                 # read-only FS: memory only
+    _MEM[mem_key] = val
+    return val
+
+
 def get_block_sizes(m: int, k: int, n: int, group_size: int,
                     strategy: KernelStrategy = OPT4GPTQ, *,
                     interpret: bool = True,
@@ -220,3 +242,62 @@ def get_block_sizes(m: int, k: int, n: int, group_size: int,
             pass                                 # read-only FS: memory only
     _MEM[mem_key] = cfg
     return cfg
+
+
+# ------------------------------------------------------- paged-prefill q_chunk
+# ISSUE 10 satellite: the chunked-prefill query tile height used to be a
+# fixed 128; ``KernelConfig(q_chunk="auto")`` co-tunes it with the engine's
+# step token budget.  Candidates stay lane-aligned (multiples of 128) and
+# never exceed the suffix length's bucket — a taller tile than the block is
+# pure pad work.
+Q_CHUNK_CANDIDATES = (128, 256, 512)
+
+
+def q_chunk_cache_key(s: int, h: int, hkv: int, d: int, page_size: int, *,
+                      interpret: bool = True) -> str:
+    mode = "interp" if interpret else "compiled"
+    return f"qchunk:s{s}:h{h}:kv{hkv}:d{d}:ps{page_size}:{mode}"
+
+
+def q_chunk_candidates(s: int) -> list[int]:
+    cands = [c for c in Q_CHUNK_CANDIDATES if c <= max(s, Q_CHUNK_CANDIDATES[0])]
+    return cands or [Q_CHUNK_CANDIDATES[0]]
+
+
+def autotune_q_chunk(s: int, h: int, hkv: int, d: int, page_size: int, *,
+                     interpret: bool = True) -> int:
+    """Wall-clock the chunked paged-prefill kernel per candidate tile height
+    on synthetic pools and return the fastest ``q_chunk``."""
+    from repro.kernels import paged_attention as PA
+    cands = q_chunk_candidates(s)
+    timed_keys.append(q_chunk_cache_key(s, h, hkv, d, page_size,
+                                        interpret=interpret))
+    if len(cands) == 1:
+        return cands[0]
+    rng = np.random.default_rng(0)
+    n_pages = -(-s // page_size)
+    q = jnp.asarray(rng.normal(size=(1, s, h, d)).astype(np.float32))
+    kp = jnp.asarray(
+        rng.normal(size=(n_pages + 1, page_size, hkv, d)).astype(np.float32))
+    vp = jnp.asarray(
+        rng.normal(size=(n_pages + 1, page_size, hkv, d)).astype(np.float32))
+    bt = jnp.arange(1, n_pages + 1, dtype=jnp.int32)[None]
+    start = jnp.zeros((1,), jnp.int32)
+    lengths = jnp.full((1,), s, jnp.int32)
+    best_t, best_c = float("inf"), cands[0]
+    for qc in cands:
+        fn = lambda: PA.paged_prefill(q, kp, vp, bt, start, lengths,
+                                      q_chunk=qc, interpret=interpret)
+        t = _time_call(fn)
+        if t < best_t:
+            best_t, best_c = t, qc
+    return best_c
+
+
+def get_q_chunk(s: int, h: int, hkv: int, d: int, page_size: int, *,
+                interpret: bool = True, path: str | None = None) -> int:
+    """Cached ``q_chunk`` lookup: memory -> JSON file -> tune (and persist)."""
+    key = q_chunk_cache_key(s, h, hkv, d, page_size, interpret=interpret)
+    return _q_chunk_lookup(
+        key, path,
+        lambda: autotune_q_chunk(s, h, hkv, d, page_size, interpret=interpret))

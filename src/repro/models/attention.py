@@ -165,6 +165,20 @@ def gqa_init(rng, cfg: ModelConfig, dtype=jnp.float32):
     return p
 
 
+def _resolve_q_chunk(kernels, chunk: int, s: int, cfg, page_size: int) -> int:
+    """Paged-prefill query tile height (ISSUE 10 satellite).  ``None`` keeps
+    the historical 128; a concrete int was lane-validated by ``KernelConfig``;
+    ``"auto"`` consults the autotuner cache — shapes are static at trace
+    time, so the lookup (which times concrete synthetic arrays) runs
+    host-side even under an outer jit trace."""
+    qc = getattr(kernels, "q_chunk", None)
+    if qc == "auto":
+        from repro.kernels import autotune as AT
+        qc = AT.get_q_chunk(s, cfg.num_heads, cfg.num_kv_heads,
+                            cfg.head_dim, page_size)
+    return min(chunk, qc or 128)
+
+
 def gqa_apply(p, x, *, cfg: ModelConfig, kernels=L.DEFAULT_KERNELS,
               positions=None, cache=None, seq_lens=None, window: int = 0,
               causal: bool = True, num_sink: int = 0, block_tables=None,
@@ -240,7 +254,9 @@ def gqa_apply(p, x, *, cfg: ModelConfig, kernels=L.DEFAULT_KERNELS,
             if kernels.paged_prefill_impl == "kernel":
                 out = PA.paged_prefill(q, kp, vp, block_tables, seq_lens,
                                        seq_lens + wl, k_scales=ksc,
-                                       v_scales=vsc, q_chunk=min(chunk, 128))
+                                       v_scales=vsc,
+                                       q_chunk=_resolve_q_chunk(
+                                           kernels, chunk, s, cfg, ps))
             else:
                 out = KR.paged_prefill_ref(q, kp, vp, block_tables, seq_lens,
                                            seq_lens + wl, k_scales=ksc,

@@ -164,6 +164,9 @@ def constrain_logits(x):
 
 
 # ------------------------------------------------------------------ kernel cfg
+LANE = 128   # TPU lane width: last-dim tiling unit for VMEM tiles
+
+
 class CacheLayout(str, enum.Enum):
     """Serving KV-cache layout (DESIGN.md §2/§10).
 
@@ -191,13 +194,30 @@ class KernelConfig:
     ``"kernel"`` (the Pallas kernels, interpret-mode on CPU) or ``"ref"``
     (the jnp gather oracles in ``kernels/ref.py``, which materialize a
     contiguous KV copy — debugging and the bench's gather-vs-kernel
-    comparison only)."""
+    comparison only).
+
+    ``q_chunk`` bounds the query rows per grid step of the chunked
+    ``paged_prefill`` kernel (the VMEM query tile is (q_chunk·rep, D)).
+    ``None`` keeps the historical 128; ``"auto"`` consults the autotuner
+    cache (co-tuned with the engine's step token budget); a concrete value
+    must be a positive multiple of the 128-wide TPU lane."""
     strategy: KernelStrategy = OPT4GPTQ
     use_pallas: bool = False          # False: jnp ref path (CPU / dry-run)
     block_sizes: tuple[int, int, int] | str | None = None
     cache_layout: str = CacheLayout.SLOT
     paged_attention_impl: str = "kernel"
     paged_prefill_impl: str = "kernel"
+    q_chunk: int | str | None = None
+
+    def __post_init__(self):
+        qc = self.q_chunk
+        if qc is None or qc == "auto":
+            return
+        if not isinstance(qc, int) or isinstance(qc, bool) or qc <= 0 \
+                or qc % LANE != 0:
+            raise ValueError(
+                f"q_chunk must be a positive multiple of the {LANE}-wide "
+                f"lane (or 'auto'), got {qc!r}")
 
 
 DEFAULT_KERNELS = KernelConfig()

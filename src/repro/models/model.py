@@ -191,12 +191,36 @@ class LM:
         return loss + aux, {"loss": loss, "aux": aux}
 
     # ----------------------------------------------------------- serving steps
+    def forward_chunks(self, params, tokens, chunk_lens, cache, seq_lens, *,
+                       kernels=L.DEFAULT_KERNELS, block_tables=None,
+                       extra=None):
+        """Unified serving forward (ISSUE 10, DESIGN.md §18): every row is
+        one (chunk_start=seq_lens, chunk_len) span of its sequence — decode
+        is a 1-token chunk, chunked prefill a budget-sized chunk, spec-verify
+        a (k+1)-token chunk — all through the same cached multi-token path.
+
+        tokens     : (B, C) int32, right-padded past ``chunk_lens``.
+        chunk_lens : (B,) int32 real tokens per row; padded (and dead-row)
+                     positions' cache writes are null-routed (paged) or
+                     dropped (slot), and their keys are masked out of every
+                     row's attention window.
+        Row positions start at the absolute offset ``seq_lens``.  Returns
+        (logits (B, C, V) fp32, new_cache); the caller advances seq_lens.
+        """
+        batch = {"tokens": tokens}
+        if extra:
+            batch.update(extra)
+        logits, cache, _ = self.apply(
+            params, batch, kernels=kernels, cache=cache, seq_lens=seq_lens,
+            mode="decode", block_tables=block_tables, write_lens=chunk_lens)
+        return logits, cache
+
     def prefill(self, params, batch, cache, seq_lens, *,
                 kernels=L.DEFAULT_KERNELS, true_lengths=None,
                 block_tables=None):
-        """Process a full prompt while writing the cache; returns logits of the
-        last *real* position (``true_lengths`` handles right-padded bucketed
-        prompts), new cache, new seq_lens."""
+        """Whole-prompt convenience wrapper over ``forward_chunks``; returns
+        logits of the last *real* position (``true_lengths`` handles
+        right-padded bucketed prompts), new cache, new seq_lens."""
         cfg = self.cfg
         tokens = batch["tokens"]
         b, s = tokens.shape
@@ -214,10 +238,14 @@ class LM:
         # bucketed prompts: padded positions' cache writes are masked on
         # every layout — routed to the null page (paged) or dropped (slot);
         # real writes cover true_lengths tokens of the block
-        write_lens = true_lengths
-        logits, cache, _ = self.apply(
-            params, batch, kernels=kernels, cache=cache, seq_lens=seq_lens,
-            mode="prefill", block_tables=block_tables, write_lens=write_lens)
+        if true_lengths is None:
+            chunk_lens = jnp.full((b,), s, jnp.int32)
+        else:
+            chunk_lens = true_lengths.astype(jnp.int32)
+        extra = {k: v for k, v in batch.items() if k != "tokens"}
+        logits, cache = self.forward_chunks(
+            params, tokens, chunk_lens, cache, seq_lens, kernels=kernels,
+            block_tables=block_tables, extra=extra)
         if true_lengths is None:
             last = logits[:, -1]
         else:
@@ -228,13 +256,12 @@ class LM:
 
     def decode_step(self, params, tokens, cache, seq_lens, *,
                     kernels=L.DEFAULT_KERNELS, extra=None, block_tables=None):
-        """tokens: (B, 1). Returns (logits (B, V), cache, seq_lens+1)."""
-        batch = {"tokens": tokens}
-        if extra:
-            batch.update(extra)
-        logits, cache, _ = self.apply(params, batch, kernels=kernels,
-                                      cache=cache, seq_lens=seq_lens,
-                                      mode="decode", block_tables=block_tables)
+        """tokens: (B, 1). Returns (logits (B, V), cache, seq_lens+1).
+        One-token-chunk wrapper over ``forward_chunks``."""
+        b, s = tokens.shape
+        logits, cache = self.forward_chunks(
+            params, tokens, jnp.full((b,), s, jnp.int32), cache, seq_lens,
+            kernels=kernels, block_tables=block_tables, extra=extra)
         return logits[:, -1], cache, seq_lens + 1
 
 

@@ -135,6 +135,12 @@ class EngineConfig:
     mesh_shape: tuple | None = None
     # mesh axis name the row-parallel all-reduce epilogue psums over
     tp_axis: str = "model"
+    # ---- fused-step execution (ISSUE 10, DESIGN.md §18) ----
+    # token budget of one fused engine step: decode/verify rows claim their
+    # tokens first, the remainder is handed to waiting prompts as prefill
+    # chunks riding the same jitted program.  None = no budget — a whole
+    # remaining prompt prefills in one chunk (still via the fused program)
+    max_step_tokens: int | None = None
 
     def __post_init__(self):
         if self.batch_slots <= 0:
@@ -224,11 +230,10 @@ class EngineConfig:
                         "tensor-parallel serving shards the KV page pools "
                         "— cache='paged' required with mesh_shape "
                         f"{dims}")
-                if self.speculation is not None:
-                    raise ValueError(
-                        "speculative decoding is not supported under "
-                        "tensor parallelism yet (mesh_shape "
-                        f"{dims} with speculation)")
+        if self.max_step_tokens is not None and self.max_step_tokens <= 0:
+            raise ValueError(
+                f"max_step_tokens must be > 0 (or None for unbudgeted "
+                f"prefill chunks), got {self.max_step_tokens}")
         if not self.tp_axis or not isinstance(self.tp_axis, str):
             raise ValueError(
                 f"tp_axis must be a non-empty axis name, got "

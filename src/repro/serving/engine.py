@@ -1,6 +1,6 @@
-"""Serving engine: continuous batching with jitted prefill and a single fused
-decode+sample step — the vLLM role in the paper's stack (DESIGN.md §2, §10,
-§11).
+"""Serving engine: continuous batching through ONE token-budgeted jitted
+program per step — the vLLM role in the paper's stack (DESIGN.md §2, §10,
+§11, §18).
 
 The public surface is the request lifecycle API (``serving/api.py``):
 
@@ -51,11 +51,25 @@ Two cache layouts, selected by ``EngineConfig.cache`` (default: the
   to the null page (``write_lens``), so recompiles stay bounded by the
   bucket set.
 
-The decode hot loop is sync-free in both layouts: per-request sampling
-parameters are lowered to per-row device arrays (greedy flag, temperature,
-top-k/top-p, one PRNG key per row), empty rows are masked on device, and the
-whole model-step + sample runs inside one ``jit``.  Exactly one device->host
-transfer happens per decode step — the (B,) sampled-token vector.
+Fused-step execution (ISSUE 10, DESIGN.md §18): every engine step is one
+invocation of ``_fused_step_impl`` over a token-budgeted batch in which each
+row is a ``(seq, chunk_start=seq_lens, chunk_len)`` span of its sequence —
+plain decode is a 1-token chunk, chunked prefill a budget-sized chunk, and
+speculative verify a (k+1)-token chunk.  Admission only *reserves* cache
+space (pages / a slot); the prompt then streams into the cache as chunks
+dealt by ``Scheduler.plan_chunks`` under ``EngineConfig.max_step_tokens``,
+so a long prompt can no longer stall concurrent decodes for its whole
+prefill — the bounded-TTFT-under-load payoff BENCH_serving.json's
+``chunked_prefill`` section measures.  The step width is bucketed
+(1, k+1, then the prefill buckets) so jit recompiles stay bounded under
+mixed traffic.
+
+The hot loop is sync-free in both layouts: per-request sampling parameters
+are lowered to per-row device arrays (greedy flag, temperature, top-k/top-p,
+one PRNG key per row), empty rows are masked on device, and the whole
+model-step + accept/sample runs inside one ``jit``.  Exactly one
+device->host transfer happens per step — the packed (B, K+2) int32 matrix
+``[n_emitted | emitted tokens...]`` (K=0 without speculation).
 """
 from __future__ import annotations
 
@@ -78,8 +92,10 @@ from repro.serving import spec_decode as SD
 from repro.serving.api import (EngineConfig, FinishReason, QueueFullError,
                                RequestOutput, RequestState, StreamEvent)
 from repro.serving.metrics import EngineMetrics, make_engine_metrics
-from repro.serving.sampler import SamplingParams, sample, sample_batched
-from repro.serving.scheduler import Active, Request, Scheduler, bucket_len
+from repro.serving.sampler import (SamplingParams, accept_speculative,
+                                   sample)
+from repro.serving.scheduler import (PREFILL_BUCKETS, Active, Request,
+                                     Scheduler, bucket_len)
 
 
 class EngineStats:
@@ -250,6 +266,7 @@ class Engine:
         # rid -> RestoredSeq for restores committed by _reserve_paged but
         # not yet resumed by _admit_paged (one admission pass apart)
         self._pending_restores: dict[int, KV.RestoredSeq] = {}
+        self._admit_round: list[Request] = []
         kvq = config.kv_quant            # normalized by EngineConfig
         if kvq is not None and not kvq.quantized:
             # fp passthrough is just another way to spell the cache dtype
@@ -347,41 +364,6 @@ class Engine:
         self.batch_rows = batch_slots
         self.max_len = max_len
 
-        # donate the cache tree (and decode seq_lens) so XLA updates the KV
-        # pools in place instead of copying the whole pool every step — the
-        # engine reassigns them from the jit results and keeps no other
-        # reference.  CPU has no donation support (it would only warn), so
-        # gate on the backend.
-        cpu = jax.default_backend() == "cpu"
-        if self._tp_ctx is not None:
-            # shard_map entry points (serving/parallel.py): same impls, same
-            # operand positions, traced against the per-device local model
-            self._decode = jax.jit(
-                PL.tp_wrap_decode(self._tp_ctx, self.kernels,
-                                  self._decode_impl),
-                static_argnames=("all_greedy",),
-                donate_argnums=() if cpu else (2, 3))   # cache, seq_lens
-            self._prefill_paged = jax.jit(
-                PL.tp_wrap_prefill_paged(self._tp_ctx, self.kernels,
-                                         self._prefill_paged_impl),
-                donate_argnums=() if cpu else (3,))     # paged cache tree
-        else:
-            self._decode = jax.jit(
-                functools.partial(self._decode_impl, self.model,
-                                  self.kernels),
-                static_argnames=("all_greedy",),
-                donate_argnums=() if cpu else (2, 3))   # cache, seq_lens
-            self._prefill_paged = jax.jit(
-                functools.partial(self._prefill_paged_impl, self.model,
-                                  self.kernels),
-                donate_argnums=() if cpu else (3,))     # paged cache tree
-        self._prefill = jax.jit(
-            functools.partial(self._prefill_impl, self.model, self.kernels),
-            donate_argnums=() if cpu else (3,))         # slot sub-cache
-        self._read_slot = jax.jit(self._read_slot_impl)
-        self._write_slot = jax.jit(self._write_slot_impl,
-                                   donate_argnums=() if cpu else (0,))
-
         # ---- speculative decoding (DESIGN.md §16) ----
         self._spec: Optional[SD.Speculator] = None
         if config.speculation is not None:
@@ -398,10 +380,47 @@ class Engine:
                     f"attn_type={cfg.attn_type!r}")
             self._spec = SD.make_speculator(config.speculation, model,
                                             config, kernels=self.kernels)
-            self._verify = jax.jit(
-                functools.partial(SD.verify_impl, self.model, self.kernels),
-                static_argnames=("all_greedy",),
-                donate_argnums=() if cpu else (4, 5))   # cache, seq_lens
+
+        # Chunked prefill rides the same write-masked multi-token path as
+        # spec-verify, so it carries the same family restriction; the other
+        # slot-layout families (SSM/SWA/hybrid/meta — paging already rejects
+        # them) keep the legacy inline whole-prompt prefill at admission and
+        # run their decodes as 1-token chunks of the fused step.
+        cfg = model.cfg
+        self._chunked = (cfg.family not in ("ssm", "hybrid")
+                         and not cfg.sliding_window and not cfg.meta_tokens
+                         and cfg.attn_type == "gqa")
+        # fused-step width buckets: 1 (pure decode), k+1 (verify), then the
+        # prefill buckets — bounds recompiles under mixed traffic
+        k1 = self._spec.k + 1 if self._spec is not None else 1
+        self._width_buckets = tuple(sorted({1, k1, *PREFILL_BUCKETS}))
+
+        # donate the cache tree (and seq_lens) so XLA updates the KV pools
+        # in place instead of copying the whole pool every step — the
+        # engine reassigns them from the jit results and keeps no other
+        # reference.  CPU has no donation support (it would only warn), so
+        # gate on the backend.
+        cpu = jax.default_backend() == "cpu"
+        tol = (config.speculation.greedy_accept_tol
+               if config.speculation is not None else None)
+        # the ONE jitted program every step runs (ISSUE 10): decode,
+        # chunked prefill and spec-verify are all chunk rows of it
+        impl = functools.partial(self._fused_step_impl, greedy_tol=tol)
+        if self._tp_ctx is not None:
+            # shard_map entry point (serving/parallel.py): same impl, same
+            # operand positions, traced against the per-device local model
+            fused = PL.tp_wrap_fused(self._tp_ctx, self.kernels, impl)
+        else:
+            fused = functools.partial(impl, self.model, self.kernels)
+        self._fused = jax.jit(
+            fused, static_argnames=("all_greedy",),
+            donate_argnums=() if cpu else (6, 7))       # cache, seq_lens
+        self._prefill = jax.jit(
+            functools.partial(self._prefill_impl, self.model, self.kernels),
+            donate_argnums=() if cpu else (3,))         # slot sub-cache
+        self._read_slot = jax.jit(self._read_slot_impl)
+        self._write_slot = jax.jit(self._write_slot_impl,
+                                   donate_argnums=() if cpu else (0,))
 
         # ---- prefix-cache persistence (DESIGN.md §16) ----
         if config.prefix_cache_path is not None:
@@ -413,54 +432,84 @@ class Engine:
 
     # ------------------------------------------------------------ jitted fns
     @staticmethod
-    def _decode_impl(model, kernels, params, tokens, cache, seq_lens,
-                     block_tables, live, greedy, temps, top_ks, top_ps, keys,
-                     *, all_greedy: bool = False):
-        """Fused decode step: model forward + per-row-parameterized sampling.
+    def _fused_step_impl(model, kernels, params, tokens, chunk_lens, drafts,
+                         draft_lens, emit, cache, seq_lens, block_tables,
+                         live, greedy, temps, top_ks, top_ps, keys,
+                         draft_probs, *, all_greedy: bool = False,
+                         greedy_tol: float | None = None):
+        """THE engine program (ISSUE 10, DESIGN.md §18): one forward over a
+        token-budgeted batch of per-row chunks, then accept/sample.
 
-        All sampling state arrives as per-row arrays so one trace serves
-        every mix of greedy/temperature/top-k/top-p requests; ``all_greedy``
-        is a static host-known flag selecting an argmax-only second trace for
-        the common all-greedy batch — the sampling operands arrive as None
-        there (nothing staged, no rng split, no sort/softmax machinery).
-        ``block_tables`` is None on the slot path.  Dead rows
-        (``live == False``) keep seq_lens at 0 and emit token 0 (never read);
-        in the paged layout their block-table row points at the null page,
-        which absorbs their masked writes.
+        Every row is a ``(chunk_start=seq_lens[i], chunk_len=chunk_lens[i])``
+        span of its sequence, right-padded to the bucketed step width C:
+
+        * plain decode       — 1-token chunk, ``draft_lens=0``, ``emit``
+        * chunked prefill    — budget-sized chunk; ``emit`` only on the
+          chunk that completes the prompt (its last-position logits yield
+          the first generated token)
+        * speculative verify — (draft_lens+1)-token chunk ``[anchor |
+          drafts]``; drafts are spliced in on device so device-resident
+          draft-model proposals never round-trip through the host
+        * unscheduled rows   — ``live=False``: writes masked, seq_lens kept
+
+        ``accept_speculative`` degenerates to plain greedy/sampled decode at
+        ``draft_lens=0`` (window width 1 → bonus token only), so ONE program
+        serves every mix.  Cache writes cover ``chunk_lens`` positions
+        (write_lens masking: null page on the paged layout, dropped on the
+        slot layout); rejected-draft KV is dead weight the next chunk
+        overwrites before anything can attend it (rollback by not advancing
+        seq_lens).  Returns the packed (B, K+2) int32 transfer
+        ``[n_emit | emitted...]``, the cache, and advanced seq_lens.
         """
-        logits, cache, seq_lens = model.decode_step(
-            params, tokens, cache, seq_lens, kernels=kernels,
+        b, c = tokens.shape
+        k = drafts.shape[1]
+        if k and c > k:
+            # splice drafts behind each row's anchor token (positions 1..k);
+            # rows without drafts (prefill chunks, plain decode) keep their
+            # staged tokens
+            dmask = jnp.arange(k, dtype=jnp.int32)[None, :] \
+                < draft_lens[:, None]
+            span = jax.lax.dynamic_slice_in_dim(tokens, 1, k, axis=1)
+            tokens = jax.lax.dynamic_update_slice(
+                tokens, jnp.where(dmask, drafts, span), (0, 1))
+        wl = jnp.where(live, chunk_lens, 0)
+        logits, cache = model.forward_chunks(
+            params, tokens, wl, cache, seq_lens, kernels=kernels,
             block_tables=block_tables)
-        if all_greedy:
-            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        else:
-            toks = sample_batched(logits, keys, greedy=greedy, temps=temps,
-                                  top_ks=top_ks, top_ps=top_ps)
-        toks = jnp.where(live, toks, 0)
-        seq_lens = jnp.where(live, seq_lens, 0)
-        return toks, cache, seq_lens
+        # verify window: positions [start, start+k] score the k drafts + the
+        # bonus.  start = chunk_lens-1 for draft-free rows (the last real
+        # position — its argmax/sample is the next token), 0 for verify rows
+        start = jnp.clip(chunk_lens - 1 - draft_lens, 0, None)
+        idx = jnp.clip(
+            start[:, None] + jnp.arange(k + 1, dtype=jnp.int32)[None, :],
+            0, c - 1)
+        window = jnp.take_along_axis(logits, idx[:, :, None], axis=1)
+        n_acc, emitted = accept_speculative(
+            window, drafts, draft_lens, keys, greedy=greedy, temps=temps,
+            top_ks=top_ks, top_ps=top_ps, draft_probs=draft_probs,
+            all_greedy=all_greedy, greedy_tol=greedy_tol)
+        n_acc = jnp.where(live & (draft_lens > 0), n_acc, 0)
+        emit_live = emit & live
+        n_emit = jnp.where(emit_live, n_acc + 1, 0)
+        emitted = jnp.where(emit_live[:, None], emitted, 0)
+        # advance by the accepted span (verify) or the whole chunk; the
+        # emitted bonus token is never cache-written — it is the next step's
+        # decode input (dead rows: wl=0 and draft_lens=0 keep seq_lens)
+        adv = jnp.where(draft_lens > 0, n_acc + 1, wl)
+        seq_lens = seq_lens + jnp.where(live, adv, 0)
+        packed = jnp.concatenate([n_emit[:, None], emitted],
+                                 axis=1).astype(jnp.int32)
+        return packed, cache, seq_lens
 
     @staticmethod
     def _prefill_impl(model, kernels, params, tokens, length, cache, seq_lens):
         # tokens right-padded to a bucket; `length` is the true prompt length.
+        # Legacy inline-prefill path: slot-layout families whose caches the
+        # write-masked chunked path cannot serve (SSM/SWA/hybrid/meta).
         lengths = jnp.full((tokens.shape[0],), length, jnp.int32)
         logits, cache, seq_lens = model.prefill(
             params, {"tokens": tokens}, cache, seq_lens, kernels=kernels,
             true_lengths=lengths)   # index within the text block
-        return logits, cache, seq_lens - (tokens.shape[1] - length)
-
-    @staticmethod
-    def _prefill_paged_impl(model, kernels, params, tokens, length, cache,
-                            seq_start, block_tables):
-        """Bucketed (possibly suffix-only) prefill writing KV pages through
-        the block table.  ``seq_start`` is the prefix-hit length; ``length``
-        is the true suffix length — padded positions' page writes are routed
-        to the null page (write_lens inside model.prefill), so bucketing is
-        as safe as on the slot path and recompiles stay bounded."""
-        lengths = jnp.full((tokens.shape[0],), length, jnp.int32)
-        logits, cache, seq_lens = model.prefill(
-            params, {"tokens": tokens}, cache, seq_start, kernels=kernels,
-            true_lengths=lengths, block_tables=block_tables)
         return logits, cache, seq_lens - (tokens.shape[1] - length)
 
     @staticmethod
@@ -660,44 +709,61 @@ class Engine:
             slot = self.slots.alloc()
             assert slot is not None
             a = self.sched.activate(req, slot)
-            t_admit = self.clock.now()
-            self.metrics.queue_wait.observe(t_admit - req.arrival)
-            # bucketed prefill on the slot's cache slice. Recurrent state
-            # (SSM) and ring caches (SWA) are polluted by padded tokens ->
-            # exact-length prefill for those families (one compile per length)
-            cfg = self.model.cfg
-            paddable = cfg.family not in ("ssm", "hybrid") and not cfg.sliding_window
-            blen = bucket_len(len(req.tokens)) if paddable else len(req.tokens)
+            a.t_admit = self.clock.now()
+            self.metrics.queue_wait.observe(a.t_admit - req.arrival)
+            if not self._chunked:
+                self._prefill_slot_inline(req, a, slot, finished)
+                continue
+            # reservation only: the prompt streams into the slot as fused-
+            # step chunks (write_lens drops each chunk's padded positions)
+            a.prefill_ctx = req.tokens
+            a.prefill_pos = 0
+            a.prefill_end = len(req.tokens)
+            self.slots.seq_lens = self.slots.seq_lens.at[slot].set(0)
             if self.tracer is not None:
-                self.tracer.request_state(req.rid, "PREFILL", t_admit,
+                self.tracer.request_state(req.rid, "PREFILL", a.t_admit,
                                           prompt_len=len(req.tokens),
-                                          prefill_chunk=blen, slot=slot)
-            toks = np.zeros((1, blen), np.int32)
-            toks[0, :len(req.tokens)] = req.tokens
-            slot_idx = jnp.asarray(slot, jnp.int32)
-            sub_cache = self._read_slot(self.slots.cache, slot_idx)
-            sub_lens = jnp.zeros((1,), jnp.int32)
-            logits, sub_cache, sub_lens = self._prefill(
-                self.params, jnp.asarray(toks), len(req.tokens), sub_cache,
-                sub_lens)
-            # prefill wrote positions [0, blen); real length excludes padding
-            self.slots.cache = self._write_slot(self.slots.cache, sub_cache,
-                                                slot_idx)
-            self.slots.seq_lens = self.slots.seq_lens.at[slot].set(sub_lens[0])
-            self.metrics.prefill_tokens.inc(len(req.tokens))
-            tok = self._sample_first(logits, req)
-            a.t_first_token = self.clock.now()
-            self.metrics.ttft.labels(priority=req.priority).observe(
-                a.t_first_token - req.arrival)
-            a.output.append(tok)
-            req.state = RequestState.RUNNING
-            if self.tracer is not None:
-                self.tracer.prefill_span(req.rid, t_admit, a.t_first_token,
-                                         prefill_chunk=blen,
-                                         prefill_tokens=len(req.tokens))
-                self.tracer.request_state(req.rid, "RUNNING",
-                                          a.t_first_token)
-            self._emit_token(a, slot, tok, finished)
+                                          slot=slot)
+
+    def _prefill_slot_inline(self, req: Request, a: Active, slot: int,
+                             finished: list[RequestOutput]):
+        """Legacy whole-prompt prefill at admission, for slot-layout
+        families the write-masked chunked path cannot serve: recurrent
+        state (SSM) and ring caches (SWA) are polluted by padded tokens ->
+        exact-length prefill for those families (one compile per length)."""
+        t_admit = a.t_admit
+        cfg = self.model.cfg
+        paddable = cfg.family not in ("ssm", "hybrid") \
+            and not cfg.sliding_window
+        blen = bucket_len(len(req.tokens)) if paddable else len(req.tokens)
+        if self.tracer is not None:
+            self.tracer.request_state(req.rid, "PREFILL", t_admit,
+                                      prompt_len=len(req.tokens),
+                                      prefill_chunk=blen, slot=slot)
+        toks = np.zeros((1, blen), np.int32)
+        toks[0, :len(req.tokens)] = req.tokens
+        slot_idx = jnp.asarray(slot, jnp.int32)
+        sub_cache = self._read_slot(self.slots.cache, slot_idx)
+        sub_lens = jnp.zeros((1,), jnp.int32)
+        logits, sub_cache, sub_lens = self._prefill(
+            self.params, jnp.asarray(toks), len(req.tokens), sub_cache,
+            sub_lens)
+        self.slots.cache = self._write_slot(self.slots.cache, sub_cache,
+                                            slot_idx)
+        self.slots.seq_lens = self.slots.seq_lens.at[slot].set(sub_lens[0])
+        self.metrics.prefill_tokens.inc(len(req.tokens))
+        tok = self._sample_first(logits, req)
+        a.t_first_token = self.clock.now()
+        self.metrics.ttft.labels(priority=req.priority).observe(
+            a.t_first_token - req.arrival)
+        a.output.append(tok)
+        req.state = RequestState.RUNNING
+        if self.tracer is not None:
+            self.tracer.prefill_span(req.rid, t_admit, a.t_first_token,
+                                     prefill_chunk=blen,
+                                     prefill_tokens=len(req.tokens))
+            self.tracer.request_state(req.rid, "RUNNING", a.t_first_token)
+        self._emit_token(a, slot, tok, finished)
 
     # --------------------------------------------- paged admission/preemption
     def _gather_pages(self, page_ids: list[int]):
@@ -836,40 +902,65 @@ class Engine:
         if not self.pc.alloc_seq(req.rid, len(req.tokens), tokens=req.tokens,
                                  reserve=req.max_new_tokens):
             return False
-        self.pc.register_prefix(req.rid, req.tokens)
+        # prefix registration is deferred to prompt completion (``step``):
+        # the prompt KV now streams in over several fused-step chunks, so
+        # registering here would let a follower share still-unwritten pages
         return True
+
+    def _prefix_pending(self, req: Request) -> bool:
+        """True when an active mid-prefill row's context shares at least one
+        full page with ``req``'s prompt: that leader will publish those pages
+        to the prefix cache once its last chunk lands, so admitting ``req``
+        now would forfeit the share (the registry only lists written pages).
+        Deferring one round costs at most the leader's remaining prefill."""
+        ps = self.pc.page_size
+        ctxs = [a.prefill_ctx for a in self.sched.active.values()
+                if a.pending_prefill]
+        # leaders reserved earlier in this same admission round are not in
+        # ``active`` yet (activation happens once the round closes)
+        ctxs += [r.tokens for r in self._admit_round]
+        for ctx in ctxs:
+            n = min(len(req.tokens), len(ctx)) // ps * ps
+            lcp = next((i for i in range(n) if req.tokens[i] != ctx[i]), n)
+            if lcp >= ps:
+                return True
+        return False
 
     def _reserve_paged(self, req: Request) -> bool:
         """Admission policy for ``Scheduler.admit``: reserve the request's
         whole prompt+decode page footprint (minus prefix-cache hits) and a
-        block-table row, or defer.  The request's own full prompt pages are
-        registered in the prefix cache immediately: admission and prefill run
-        in order within one ``_admit_paged`` pass, so a later request
-        admitted in the same pass can hit these pages — their KV is written
-        (donor prefill precedes follower prefill) before anything reads
-        them.
+        block-table row, or defer.  The request's prompt pages enter the
+        prefix cache only once its last prefill chunk has written them
+        (``step``) — a follower can never share still-unwritten pages;
+        instead its admission waits until the leader's prefix is published.
 
         When the reservation fails and preemption is enabled, victims
         strictly below this request's priority are evicted (lowest class
         first, most-recently-admitted within it) until the reservation fits
         or no eligible victim remains (DESIGN.md §14)."""
+        if req.rid not in self.pc.offloaded and self._prefix_pending(req):
+            self.metrics.deferred_admissions.inc()
+            return False
         ok = self._try_reserve(req)
         while (not ok and self.config.preemption
                and self._preempt_victim(req.priority)):
             ok = self._try_reserve(req)
         if not ok:
             self.metrics.deferred_admissions.inc()
+        elif req.rid not in self._pending_restores:
+            self._admit_round.append(req)
         return ok
 
     def _resume_restored(self, req: Request, a: Active, row: int,
                          info: KV.RestoredSeq):
         """Re-activate a preempted request after its pages came back
-        on-device: re-attach its generated tokens, recompute any prefix
+        on-device: re-attach its generated tokens and schedule any prefix
         span whose donor evicted while it was offloaded (``[hit_pages,
-        snap_start_page)`` — restore left those pages empty), and republish
-        its full pages to the prefix cache.  No token is sampled here: the
-        next token comes from the next decode step, fed the last generated
-        token — which makes the round trip token-identical under greedy."""
+        snap_start_page)`` — restore left those pages empty) as fused-step
+        chunks.  No token is sampled for the gap (``prefill_sample=False``):
+        the next token comes from the next decode step, fed the last
+        generated token — which makes the round trip token-identical under
+        greedy."""
         pc = self.pc
         ctx = self._ctx_tokens(req)
         a.output = req.saved_output
@@ -877,93 +968,79 @@ class Engine:
         req.saved_output = []
         gap_start = info.hit_pages * pc.page_size
         gap_end = info.snap_start_page * pc.page_size
-        gap_tokens = 0
-        if gap_start < gap_end:
-            gap = ctx[gap_start:gap_end]
-            gap_tokens = len(gap)
-            blen = bucket_len(len(gap))
-            toks = np.zeros((1, blen), np.int32)
-            toks[0, :len(gap)] = gap
-            seq_start = jnp.full((1,), gap_start, jnp.int32)
-            _, self.cache, _ = self._prefill_paged(
-                self.params, jnp.asarray(toks), len(gap), self.cache,
-                seq_start, pc.block_tables[row][None])
-            self.metrics.prefill_tokens.inc(len(gap))
-        pc.seq_lens = pc.seq_lens.at[row].set(info.length)
-        pc.register_prefix(req.rid, ctx)
         m = self.metrics
         m.restored_pages.inc(info.restored_pages)
         m.prefix_hit_pages.inc(info.hit_pages)
         m.prefix_hit_tokens.inc(gap_start)
-        req.state = RequestState.RUNNING
         if self.tracer is not None:
             now = self.clock.now()
             self.tracer.request_instant(
                 req.rid, "restore", now, restored_pages=info.restored_pages,
-                hit_pages=info.hit_pages, gap_recompute_tokens=gap_tokens)
-            self.tracer.request_state(req.rid, "RUNNING", now, restored=True)
+                hit_pages=info.hit_pages,
+                gap_recompute_tokens=max(0, gap_end - gap_start))
+        if gap_start < gap_end:
+            # stream the donor-evicted span back through budget-sized
+            # chunks; the row decodes again once they land (its snapshot
+            # pages past the gap already hold KV — ``resume_len`` is
+            # published then)
+            a.prefill_ctx = ctx
+            a.prefill_pos = gap_start
+            a.prefill_end = gap_end
+            a.prefill_sample = False
+            a.resume_len = info.length
+            pc.seq_lens = pc.seq_lens.at[row].set(gap_start)
+            return
+        pc.seq_lens = pc.seq_lens.at[row].set(info.length)
+        pc.register_prefix(req.rid, ctx)
+        req.state = RequestState.RUNNING
+        if self.tracer is not None:
+            self.tracer.request_state(req.rid, "RUNNING", self.clock.now(),
+                                      restored=True)
 
     def _admit_paged(self, finished: list[RequestOutput]):
         pc = self.pc
+        self._admit_round = []
         for req in self.sched.admit(self._reserve_paged):
             row = pc.row_of(req.rid)
             a = self.sched.activate(req, row)
-            t_admit = self.clock.now()
-            self.metrics.queue_wait.observe(t_admit - req.arrival)
+            a.t_admit = self.clock.now()
+            self.metrics.queue_wait.observe(a.t_admit - req.arrival)
             info = self._pending_restores.pop(req.rid, None)
             if info is not None:
-                # preemption restore: pages are back (host scatter + prefix
-                # re-share already done by _try_reserve); no prefill, no
-                # first-token sample — decode continues where it left off
+                # preemption restore: pages are back (host scatter already
+                # done by _try_reserve); no first-token sample — decode
+                # continues where it left off, possibly after gap chunks
                 self._resume_restored(req, a, row, info)
                 continue
             hit_pages = pc.prefix_hits.get(req.rid, 0)
             if hit_pages * pc.page_size >= len(req.tokens):
-                # Full-prefix hit (ISSUE 5): a zero-token suffix would make
-                # ``_sample_first`` read logits of a pure-padding prefill.
-                # Back off so at least the last prompt token is recomputed;
-                # the backed-off pages are swapped private first so a
-                # donor's live pages are never rewritten.  Unreachable via
+                # Full-prefix hit (ISSUE 5): a zero-token suffix chunk would
+                # leave no position to sample the first token from.  Back
+                # off so at least the last prompt token is recomputed; the
+                # backed-off pages are swapped private first so a donor's
+                # live pages are never rewritten.  Unreachable via
                 # ``alloc_seq``'s own hit cap — this guards any future
                 # admission path that shares more aggressively.
                 hit_pages = (len(req.tokens) - 1) // pc.page_size
                 pc.release_prefix(req.rid, hit_pages)
                 pc.prefix_hits[req.rid] = hit_pages
             hit_tokens = hit_pages * pc.page_size
-            suffix = req.tokens[hit_tokens:]
-            # bucketed suffix prefill against the reused prefix pages
-            blen = bucket_len(len(suffix))
-            if self.tracer is not None:
-                self.tracer.request_state(
-                    req.rid, "PREFILL", t_admit, prompt_len=len(req.tokens),
-                    prefill_chunk=blen, prefix_hit_pages=hit_pages,
-                    pages_reserved=len(pc.tables[req.rid]), row=row)
-            toks = np.zeros((1, blen), np.int32)
-            toks[0, :len(suffix)] = suffix
-            row_bt = self.pc.block_tables[row][None]
-            seq_start = jnp.full((1,), hit_tokens, jnp.int32)
-            logits, self.cache, new_lens = self._prefill_paged(
-                self.params, jnp.asarray(toks), len(suffix), self.cache,
-                seq_start, row_bt)
-            pc.seq_lens = pc.seq_lens.at[row].set(new_lens[0])
+            # reservation only: the prompt suffix streams into the reserved
+            # pages as fused-step chunks (Scheduler.plan_chunks deals them
+            # under the token budget); the device row starts at the hit
+            a.prefill_ctx = req.tokens
+            a.prefill_pos = hit_tokens
+            a.prefill_end = len(req.tokens)
+            pc.seq_lens = pc.seq_lens.at[row].set(hit_tokens)
+            pc.lengths[req.rid] = hit_tokens
             m = self.metrics
-            m.prefill_tokens.inc(len(suffix))
             m.prefix_hit_pages.inc(hit_pages)
             m.prefix_hit_tokens.inc(hit_tokens)
-            tok = self._sample_first(logits, req)
-            a.t_first_token = self.clock.now()
-            m.ttft.labels(priority=req.priority).observe(
-                a.t_first_token - req.arrival)
-            a.output.append(tok)
-            req.state = RequestState.RUNNING
             if self.tracer is not None:
-                self.tracer.prefill_span(
-                    req.rid, t_admit, a.t_first_token, prefill_chunk=blen,
-                    prefill_tokens=len(suffix), prefix_hit_pages=hit_pages,
-                    pages_reserved=len(pc.tables[req.rid]))
-                self.tracer.request_state(req.rid, "RUNNING",
-                                          a.t_first_token)
-            self._emit_token(a, row, tok, finished)
+                self.tracer.request_state(
+                    req.rid, "PREFILL", a.t_admit,
+                    prompt_len=len(req.tokens), prefix_hit_pages=hit_pages,
+                    pages_reserved=len(pc.tables[req.rid]), row=row)
 
     def _finish(self, row: int, finished: list[RequestOutput],
                 reason: FinishReason = FinishReason.STOP) -> RequestOutput:
@@ -998,13 +1075,34 @@ class Engine:
     # cap it (drop-oldest) so such callers don't grow memory unboundedly
     _MAX_PENDING_EVENTS = 65_536
 
+    def _step_width(self, need: int) -> int:
+        """Bucketed fused-step width: smallest of ``_width_buckets`` (1,
+        k+1, then the prefill buckets) holding ``need`` tokens; multiples
+        of 4096 past the table.  Bounds jit recompiles under mixed
+        traffic."""
+        for b in self._width_buckets:
+            if need <= b:
+                return b
+        return -(-need // 4096) * 4096
+
     def step(self) -> list[RequestOutput]:
-        """One engine iteration: admissions + one fused decode+sample step.
+        """One engine iteration: admissions + ONE fused-step invocation
+        (DESIGN.md §18) covering every live row's chunk — decode, chunked
+        prefill and spec-verify together.
 
         Wall-clock accounting happens *here* (one clock read at entry, one
         at exit) so every pump — ``run``/``generate``/``stream`` wrappers,
         the HTTP worker thread, or a bare ``while: eng.step()`` loop —
-        accounts identically into ``engine_wall_seconds_total``."""
+        accounts identically into ``engine_wall_seconds_total``.
+
+        Rollback is implicit under speculation: ``seq_lens`` (and the host
+        page-length mirror) advance only to the accepted position;
+        rejected positions' KV is dead weight that the next chunk
+        overwrites before anything can attend it.  Per-row draft budgets
+        are capped at ``max_new - emitted - 1`` so a full acceptance plus
+        the bonus token lands exactly on the reserved page/slot footprint,
+        never past it.
+        """
         t_step0 = self.clock.now()
         if self.faults is not None:
             # deterministic fault injection (serving/faults.py): scheduled
@@ -1018,28 +1116,90 @@ class Engine:
         if not self.sched.active:
             self._end_step(t_step0, finished, decoded=0)
             return finished
-        # host-side staging: last tokens + per-row sampling arrays (numpy,
-        # no device round-trips)
         bs = self.batch_rows
-        tokens = np.zeros((bs, 1), np.int32)
+        spec = self._spec
+        k = spec.k if spec is not None else 0
+        # token-budget packing: every decode row claims its reserve (1
+        # plain, k+1 under speculation), the remaining budget is dealt to
+        # mid-prefill rows as prompt chunks; budget-starved prefill rows
+        # sit this step out (live=False, writes masked, seq_lens kept)
+        plan = self.sched.plan_chunks(self.config.max_step_tokens,
+                                      reserve=k + 1)
+        decode_rows = {row: a for row, a in self.sched.active.items()
+                       if not a.pending_prefill}
+        # host-side staging: per-row sampling arrays + chunk spans (numpy,
+        # no device round-trips)
         live = np.zeros((bs,), np.bool_)
+        emit = np.zeros((bs,), np.bool_)
+        chunk_lens = np.zeros((bs,), np.int32)
         greedy = np.ones((bs,), np.bool_)
         temps = np.ones((bs,), np.float32)
         top_ks = np.zeros((bs,), np.int32)
         top_ps = np.ones((bs,), np.float32)
         for row, a in self.sched.active.items():
             sp = a.req.sampling
-            tokens[row, 0] = a.output[-1] if a.output else a.req.tokens[-1]
-            live[row] = True
             greedy[row] = sp.greedy or sp.temperature == 0.0
             temps[row] = sp.temperature if sp.temperature > 0.0 else 1.0
             top_ks[row] = sp.top_k
             top_ps[row] = sp.top_p
         all_greedy = bool(greedy.all())
-        if self._spec is not None:
-            return self._step_speculative(t_step0, finished, tokens, live,
-                                          greedy, temps, top_ks, top_ps,
-                                          all_greedy)
+
+        # ---- speculative proposal (decode rows only) ----
+        lens = np.zeros((bs,), np.int32)
+        drafts_dev = jnp.zeros((bs, k), jnp.int32)
+        probs = None
+        proposed = 0
+        t_p1 = t_step0
+        if spec is not None and decode_rows:
+            rows: dict[int, tuple[int, list[int], int]] = {}
+            caps = np.zeros((bs,), np.int32)
+            for row, a in decode_rows.items():
+                cap = max(0, min(spec.k,
+                                 a.req.max_new_tokens - len(a.output) - 1))
+                rows[row] = (a.req.rid, a.req.tokens + a.output, cap)
+                caps[row] = cap
+            t_p0 = self.clock.now()
+            samp_host = None if all_greedy \
+                else (greedy, temps, top_ks, top_ps)
+            prop = spec.propose(rows, all_greedy=all_greedy, samp=samp_host)
+            lens = np.minimum(np.asarray(prop.draft_lens, np.int32), caps)
+            drafts_dev = prop.drafts \
+                if not isinstance(prop.drafts, np.ndarray) \
+                else jnp.asarray(prop.drafts)
+            probs = prop.probs
+            proposed = int(lens.sum())
+            t_p1 = self.clock.now()
+            self.metrics.spec_proposed.inc(proposed)
+            for row, a in decode_rows.items():
+                a.req.spec_proposed += int(lens[row])
+            if self.tracer is not None:
+                self.tracer.propose_span(t_p0, t_p1, step=self._step_no,
+                                         proposed=proposed,
+                                         batch=len(decode_rows))
+
+        # ---- chunk staging: decode anchors (+drafts on device), prompt
+        # chunks from the plan ----
+        need = k + 1 if (spec is not None and decode_rows) else 1
+        if plan:
+            need = max(need, max(plan.values()))
+        width = self._step_width(need)
+        tokens = np.zeros((bs, width), np.int32)
+        for row, a in decode_rows.items():
+            live[row] = True
+            emit[row] = True
+            chunk_lens[row] = int(lens[row]) + 1
+            tokens[row, 0] = a.output[-1] if a.output else a.req.tokens[-1]
+        for row, c in plan.items():
+            a = self.sched.active[row]
+            live[row] = True
+            chunk_lens[row] = c
+            tokens[row, :c] = \
+                a.prefill_ctx[a.prefill_pos:a.prefill_pos + c]
+            # the chunk that completes the prompt emits the first token
+            # (restore-gap chunks never sample — the next token is already
+            # in the request's output)
+            emit[row] = (a.prefill_pos + c >= a.prefill_end
+                         and a.prefill_sample)
         if all_greedy:
             # argmax-only trace: no rng consumption, no sampling operands
             samp = (None, None, None, None, None)
@@ -1048,113 +1208,39 @@ class Engine:
             samp = (jnp.asarray(greedy), jnp.asarray(temps),
                     jnp.asarray(top_ks), jnp.asarray(top_ps),
                     jax.random.split(sub, bs))
+        head = (self.params, jnp.asarray(tokens), jnp.asarray(chunk_lens),
+                drafts_dev, jnp.asarray(lens), jnp.asarray(emit))
         if self.layout == "paged":
             pc = self.pc
-            toks_dev, self.cache, pc.seq_lens = self._decode(
-                self.params, jnp.asarray(tokens), self.cache, pc.seq_lens,
-                pc.block_tables, jnp.asarray(live), *samp,
-                all_greedy=all_greedy)
-            for row, a in self.sched.active.items():
-                pc.lengths[a.req.rid] += 1   # host mirror of device seq_lens
-        else:
-            toks_dev, self.slots.cache, self.slots.seq_lens = self._decode(
-                self.params, jnp.asarray(tokens), self.slots.cache,
-                self.slots.seq_lens, None, jnp.asarray(live), *samp,
-                all_greedy=all_greedy)
-        # the single device->host transfer of the decode loop
-        toks = jax.device_get(toks_dev).tolist()
-        decoded = int(live.sum())
-        self.metrics.tokens_generated.inc(decoded)
-        self.metrics.steps.inc()
-        for s in sorted(self.sched.active):
-            a = self.sched.active[s]
-            tok = toks[s]
-            a.output.append(tok)
-            self._emit_token(a, s, tok, finished)
-        self._end_step(t_step0, finished, decoded=decoded)
-        return finished
-
-    def _step_speculative(self, t_step0: float,
-                          finished: list[RequestOutput], tokens, live,
-                          greedy, temps, top_ks, top_ps,
-                          all_greedy: bool) -> list[RequestOutput]:
-        """Speculative decode step (DESIGN.md §16): propose k drafts per
-        row, score all k+1 positions in ONE batched multi-token forward
-        over the live cache (the paged layout routes it through the
-        chunked ``paged_prefill`` kernel), accept via
-        ``sampler.accept_speculative``, and emit up to k+1 tokens.
-
-        The sync-free invariant holds per *verify* step: the single
-        device→host transfer is the packed (B, K+2) int32 result
-        ``[n_accepted | emitted...]`` — drafts themselves never make a
-        separate host round trip.  Rollback is implicit: ``seq_lens`` (and
-        the host page-length mirror) advance only to the accepted
-        position; rejected positions' KV is dead weight that the next
-        verify span overwrites before anything can attend it.  Per-row
-        draft budgets are capped at ``max_new - emitted - 1`` so a full
-        acceptance plus the bonus token lands exactly on the reserved
-        page/slot footprint, never past it.
-        """
-        spec = self._spec
-        bs = self.batch_rows
-        rows: dict[int, tuple[int, list[int], int]] = {}
-        for row, a in self.sched.active.items():
-            cap = max(0, min(spec.k,
-                             a.req.max_new_tokens - len(a.output) - 1))
-            rows[row] = (a.req.rid, a.req.tokens + a.output, cap)
-        t_p0 = self.clock.now()
-        samp_host = None if all_greedy else (greedy, temps, top_ks, top_ps)
-        prop = spec.propose(rows, all_greedy=all_greedy, samp=samp_host)
-        caps = np.zeros((bs,), np.int32)
-        for row, (_rid, _ctx, cap) in rows.items():
-            caps[row] = cap
-        lens = np.minimum(np.asarray(prop.draft_lens, np.int32), caps)
-        proposed = int(lens.sum())
-        t_p1 = self.clock.now()
-        m = self.metrics
-        m.spec_proposed.inc(proposed)
-        for row, a in self.sched.active.items():
-            a.req.spec_proposed += int(lens[row])
-        if self.tracer is not None:
-            self.tracer.propose_span(t_p0, t_p1, step=self._step_no,
-                                     proposed=proposed,
-                                     batch=len(self.sched.active))
-        if all_greedy:
-            samp = (None, None, None, None, None)
-        else:
-            self.rng, sub = jax.random.split(self.rng)
-            samp = (jnp.asarray(greedy), jnp.asarray(temps),
-                    jnp.asarray(top_ks), jnp.asarray(top_ps),
-                    jax.random.split(sub, bs))
-        drafts_dev = prop.drafts if not isinstance(prop.drafts, np.ndarray) \
-            else jnp.asarray(prop.drafts)
-        head = (self.params, jnp.asarray(tokens), drafts_dev,
-                jnp.asarray(lens))
-        if self.layout == "paged":
-            pc = self.pc
-            packed_dev, self.cache, pc.seq_lens = self._verify(
+            packed_dev, self.cache, pc.seq_lens = self._fused(
                 *head, self.cache, pc.seq_lens, pc.block_tables,
-                jnp.asarray(live), *samp, prop.probs, all_greedy=all_greedy)
+                jnp.asarray(live), *samp, probs, all_greedy=all_greedy)
         else:
-            packed_dev, self.slots.cache, self.slots.seq_lens = self._verify(
+            packed_dev, self.slots.cache, self.slots.seq_lens = self._fused(
                 *head, self.slots.cache, self.slots.seq_lens, None,
-                jnp.asarray(live), *samp, prop.probs, all_greedy=all_greedy)
-        # the single device->host transfer of the verify step
+                jnp.asarray(live), *samp, probs, all_greedy=all_greedy)
+        # the single device->host transfer of the step
         packed = np.asarray(jax.device_get(packed_dev))
         decoded = 0
         accepted_total = 0
         for row in sorted(self.sched.active):
             a = self.sched.active[row]
             rid = a.req.rid
-            n_acc = int(packed[row, 0])
-            emitted = packed[row, 1:2 + n_acc].tolist()
+            if not live[row]:
+                continue
+            if row in plan:
+                self._advance_prefill(a, row, plan[row], packed, finished)
+                continue
+            n_emit = int(packed[row, 0])
+            n_acc = n_emit - 1
             if self.layout == "paged":
-                self.pc.lengths[rid] += n_acc + 1   # host seq_lens mirror
-            a.req.spec_accepted += n_acc
-            accepted_total += n_acc
-            m.spec_accepted.inc(n_acc)
-            m.spec_accept_len.observe(n_acc)
-            for tok in emitted:
+                self.pc.lengths[rid] += n_emit   # host seq_lens mirror
+            if spec is not None:
+                a.req.spec_accepted += n_acc
+                accepted_total += n_acc
+                self.metrics.spec_accepted.inc(n_acc)
+                self.metrics.spec_accept_len.observe(n_acc)
+            for tok in packed[row, 1:1 + n_emit].tolist():
                 decoded += 1
                 a.output.append(int(tok))
                 self._emit_token(a, row, int(tok), finished)
@@ -1164,16 +1250,64 @@ class Engine:
                     # later emitted tokens are dropped with it
                     break
             else:
-                spec.observe(row, rid, n_acc)
+                if spec is not None:
+                    spec.observe(row, rid, n_acc)
+        m = self.metrics
         m.tokens_generated.inc(decoded)
         m.steps.inc()
-        m.spec_verify_steps.inc()
-        if self.tracer is not None:
-            self.tracer.verify_span(t_p1, self.clock.now(),
-                                    step=self._step_no, proposed=proposed,
-                                    accepted=accepted_total, decoded=decoded)
+        if spec is not None and decode_rows:
+            m.spec_verify_steps.inc()
+            if self.tracer is not None:
+                self.tracer.verify_span(t_p1, self.clock.now(),
+                                        step=self._step_no,
+                                        proposed=proposed,
+                                        accepted=accepted_total,
+                                        decoded=decoded)
         self._end_step(t_step0, finished, decoded=decoded)
         return finished
+
+    def _advance_prefill(self, a: Active, row: int, c: int, packed,
+                         finished: list[RequestOutput]) -> None:
+        """Bookkeeping for one landed prefill chunk: advance the span; on
+        the chunk that completes the prompt, register the now-written
+        prefix pages and surface the first generated token (or, for a
+        restore gap, publish the resumed length — its next token is
+        already in the request's output)."""
+        req = a.req
+        a.prefill_pos += c
+        self.metrics.prefill_tokens.inc(c)
+        pc = self.pc if self.layout == "paged" else None
+        if pc is not None and a.prefill_sample:
+            pc.lengths[req.rid] += c   # host seq_lens mirror
+        if a.pending_prefill:
+            return
+        if not a.prefill_sample:
+            # restore gap recomputed: the snapshot pages past the gap
+            # already hold KV — publish the full resumed length
+            if pc is not None:
+                pc.seq_lens = pc.seq_lens.at[row].set(a.resume_len)
+                pc.register_prefix(req.rid, a.prefill_ctx)
+            a.prefill_sample = True
+            a.resume_len = 0
+            req.state = RequestState.RUNNING
+            if self.tracer is not None:
+                self.tracer.request_state(req.rid, "RUNNING",
+                                          self.clock.now(), restored=True)
+            return
+        if pc is not None:
+            pc.register_prefix(req.rid, a.prefill_ctx)
+        tok = int(packed[row, 1])
+        a.t_first_token = self.clock.now()
+        self.metrics.ttft.labels(priority=req.priority).observe(
+            a.t_first_token - req.arrival)
+        a.output.append(tok)
+        req.state = RequestState.RUNNING
+        if self.tracer is not None:
+            self.tracer.prefill_span(req.rid, a.t_admit, a.t_first_token,
+                                     prefill_chunk=c,
+                                     prefill_tokens=a.prefill_end)
+            self.tracer.request_state(req.rid, "RUNNING", a.t_first_token)
+        self._emit_token(a, row, tok, finished)
 
     def _end_step(self, t0: float, finished: list[RequestOutput],
                   decoded: int) -> None:

@@ -1,7 +1,7 @@
 """Tensor-parallel paged serving (DESIGN.md §17): one ``Engine`` spanning a
 device mesh.
 
-The engine's jitted decode / paged-prefill programs are wrapped in
+The engine's single fused-step program (ISSUE 10) is wrapped in
 ``shard_map`` over a 1-D mesh so the GPTQ weights and the KV page pools are
 *partitioned* across devices while the scheduler, block tables and sampling
 state stay replicated.  Layout (Megatron col->row inside every block,
@@ -29,12 +29,12 @@ reusing the parameter role sets from ``sharding/partition.py``):
   therefore logits, argmax and samples — are identical on every device and
   the replicated out-specs are sound by construction.
 
-The shard_map body runs the *same* ``Engine._decode_impl`` /
-``_prefill_paged_impl`` code against a local model whose config carries the
-per-device head counts (``gqa_apply`` reshapes with ``cfg.num_heads`` /
-``cfg.num_kv_heads``), which keeps the Pallas ``paged_attention`` /
-``paged_prefill`` / GPTQ GEMV kernels entirely unchanged: they see a
-smaller model.
+The shard_map body runs the *same* ``Engine._fused_step_impl`` code (one
+program for decode, chunked prefill and spec-verify — ISSUE 10) against a
+local model whose config carries the per-device head counts (``gqa_apply``
+reshapes with ``cfg.num_heads`` / ``cfg.num_kv_heads``), which keeps the
+Pallas ``paged_attention`` / ``paged_prefill`` / GPTQ GEMV kernels entirely
+unchanged: they see a smaller model.
 """
 from __future__ import annotations
 
@@ -234,58 +234,42 @@ def localize_quantized(params):
 
 
 # ------------------------------------------------------------- engine entry
-def tp_wrap_decode(ctx: TPContext, kernels, impl):
-    """shard_map wrapper for ``Engine._decode_impl``: params/cache arrive
-    sharded, every host-side operand (tokens, seq_lens, block tables, live
-    mask, sampling state, PRNG keys) replicated; tokens/seq_lens leave
-    replicated so the engine's one device->host transfer per step is
-    unchanged.  Meant to be wrapped in ``jax.jit(...,
-    static_argnames=("all_greedy",))`` exactly like the single-device
-    partial it replaces."""
+def tp_wrap_fused(ctx: TPContext, kernels, impl):
+    """shard_map wrapper for ``Engine._fused_step_impl`` — the *one* jitted
+    program tensor-parallel serving wraps (ISSUE 10; the old
+    decode/prefill-paged wrapper pair collapsed into this, which is also
+    what lifted the spec-under-TP config rejection: verify is just another
+    chunk row now).  Params/cache arrive sharded; every host-side operand
+    (tokens, chunk/draft lens, masks, sampling state, PRNG keys) is
+    replicated; the packed token matrix and seq_lens leave replicated so
+    the engine's one device->host transfer per step is unchanged.  Meant to
+    be wrapped in ``jax.jit(..., static_argnames=("all_greedy",))`` exactly
+    like the single-device partial it replaces."""
     rep = P()
 
-    def wrapped(params, tokens, cache, seq_lens, block_tables, live,
-                greedy, temps, top_ks, top_ps, keys, *,
-                all_greedy: bool = False):
-        def body(params, tokens, cache, seq_lens, block_tables, live,
-                 greedy, temps, top_ks, top_ps, keys):
-            params = localize_quantized(params)
-            with L.tp_epilogue(ctx.axis):
-                return impl(ctx.local_model, kernels, params, tokens, cache,
-                            seq_lens, block_tables, live, greedy, temps,
-                            top_ks, top_ps, keys, all_greedy=all_greedy)
-
-        cspecs = cache_specs(cache, ctx.axis, ctx.tp)
-        fn = _shard_map(
-            body, ctx.mesh,
-            in_specs=(ctx.param_specs, rep, cspecs, rep, rep, rep,
-                      rep, rep, rep, rep, rep),
-            out_specs=(rep, cspecs, rep))
-        return fn(params, tokens, cache, seq_lens, block_tables, live,
-                  greedy, temps, top_ks, top_ps, keys)
-
-    return wrapped
-
-
-def tp_wrap_prefill_paged(ctx: TPContext, kernels, impl):
-    """shard_map wrapper for ``Engine._prefill_paged_impl`` — same contract
-    as ``tp_wrap_decode`` (replicated logits out, head-sharded pools
-    in/out)."""
-    rep = P()
-
-    def wrapped(params, tokens, length, cache, seq_start, block_tables):
-        def body(params, tokens, length, cache, seq_start, block_tables):
+    def wrapped(params, tokens, chunk_lens, drafts, draft_lens, emit, cache,
+                seq_lens, block_tables, live, greedy, temps, top_ks, top_ps,
+                keys, draft_probs, *, all_greedy: bool = False):
+        def body(params, tokens, chunk_lens, drafts, draft_lens, emit,
+                 cache, seq_lens, block_tables, live, greedy, temps,
+                 top_ks, top_ps, keys, draft_probs):
             params = localize_quantized(params)
             with L.tp_epilogue(ctx.axis):
                 return impl(ctx.local_model, kernels, params, tokens,
-                            length, cache, seq_start, block_tables)
+                            chunk_lens, drafts, draft_lens, emit, cache,
+                            seq_lens, block_tables, live, greedy, temps,
+                            top_ks, top_ps, keys, draft_probs,
+                            all_greedy=all_greedy)
 
         cspecs = cache_specs(cache, ctx.axis, ctx.tp)
         fn = _shard_map(
             body, ctx.mesh,
-            in_specs=(ctx.param_specs, rep, rep, cspecs, rep, rep),
+            in_specs=(ctx.param_specs, rep, rep, rep, rep, rep, cspecs,
+                      rep, rep, rep, rep, rep, rep, rep, rep, rep),
             out_specs=(rep, cspecs, rep))
-        return fn(params, tokens, length, cache, seq_start, block_tables)
+        return fn(params, tokens, chunk_lens, drafts, draft_lens, emit,
+                  cache, seq_lens, block_tables, live, greedy, temps,
+                  top_ks, top_ps, keys, draft_probs)
 
     return wrapped
 

@@ -60,6 +60,26 @@ class Active:
     # monotone admission stamp — preemption picks the most-recently-admitted
     # victim within the lowest priority class (it has the least sunk work)
     admit_seq: int = 0
+    # clock time of admission — the prefill span start (the prompt now
+    # streams in over several fused steps, so the span closes later)
+    t_admit: float = 0.0
+    # ---- chunked prefill (ISSUE 10 / DESIGN.md §18) ----
+    # admission reserves cache space but writes no prompt KV; the prompt
+    # context streams into the cache as budget-sized chunks of the fused
+    # step.  ``prefill_ctx[prefill_pos:prefill_end]`` is what remains.
+    prefill_ctx: list[int] = dataclasses.field(default_factory=list)
+    prefill_pos: int = 0
+    prefill_end: int = 0
+    # sample + emit the first token when the last chunk lands (False for a
+    # restore's donor-gap re-prefill: its next token is already in output)
+    prefill_sample: bool = True
+    # restore path: row length to publish once the gap chunks land (the
+    # snapshot pages beyond the gap already hold KV); 0 = prefill_end
+    resume_len: int = 0
+
+    @property
+    def pending_prefill(self) -> bool:
+        return self.prefill_pos < self.prefill_end
 
 
 PREFILL_BUCKETS = (32, 64, 128, 256, 512, 1024, 2048, 4096)
@@ -175,10 +195,45 @@ class Scheduler:
         for row, a in self.active.items():
             if a.req.priority >= min_priority:
                 continue
+            if a.pending_prefill:
+                # mid-prefill rows are not offloadable: the host snapshot
+                # covers ``lengths`` tokens, which for these rows is a
+                # partially-written prompt — skip them (ISSUE 10)
+                continue
             key = (a.req.priority, -a.admit_seq)
             if best is None or key < best[0]:
                 best = (key, row)
         return None if best is None else best[1]
+
+    def plan_chunks(self, budget: Optional[int], *,
+                    reserve: int = 1) -> dict[int, int]:
+        """Token-budget packing for one fused step (ISSUE 10/DESIGN.md §18).
+
+        Every active row past its prefill decodes this step and claims
+        ``reserve`` tokens up front (1 plain, k+1 under speculation); the
+        remaining budget is dealt to mid-prefill rows as prompt chunks in
+        (priority desc, submission order asc) sequence — strict, like
+        ``admit``: the first row the budget cannot feed stops the deal, so
+        exhaustion defers rather than reorders.  ``budget=None`` is
+        unbudgeted: each pending row gets its whole remaining prompt.
+        Returns {row: chunk_len} for the prefill rows scheduled this step.
+        """
+        pending = [(row, a) for row, a in self.active.items()
+                   if a.pending_prefill]
+        pending.sort(key=lambda e: (-e[1].req.priority, e[1].req.order))
+        n_decode = len(self.active) - len(pending)
+        remaining = (None if budget is None
+                     else max(0, budget - n_decode * reserve))
+        plan: dict[int, int] = {}
+        for row, a in pending:
+            need = a.prefill_end - a.prefill_pos
+            take = need if remaining is None else min(need, remaining)
+            if take <= 0:
+                break
+            plan[row] = take
+            if remaining is not None:
+                remaining -= take
+        return plan
 
     @property
     def idle(self) -> bool:

@@ -3,10 +3,11 @@
 Decode throughput is bounded by one token per model step; this module lifts
 that to up to ``k + 1`` tokens per *verify* step.  A ``Speculator`` proposes
 ``k`` draft tokens per running request, the engine scores all drafts plus
-the current input token in one batched multi-token forward over the live KV
-cache (the paged layout routes it through the chunked write-masked
-``paged_prefill`` kernel), and ``sampler.accept_speculative`` keeps the
-longest valid prefix plus one bonus/resample token.  Rollback is free by
+the current input token as a (k+1)-token chunk row of its fused step
+(``Engine._fused_step_impl``, ISSUE 10 — the paged layout routes it through
+the chunked write-masked ``paged_prefill`` kernel), and
+``sampler.accept_speculative`` keeps the longest valid prefix plus one
+bonus/resample token.  Rollback is free by
 construction: speculative KV writes land at positions ``[L, L + wl)`` but
 ``seq_lens`` / the host page-length mirror only advance to the accepted
 position, so rejected tokens are never attended and are overwritten by the
@@ -36,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.sampler import accept_speculative, filter_logits
+from repro.serving.sampler import filter_logits
 
 MAX_SPEC_K = 16
 
@@ -60,12 +61,22 @@ class SpecConfig:
     draft_model: object = None
     draft_params: object = None
     draft_seed: int = 0
+    # tolerance-aware greedy acceptance (ISSUE 10 satellite): accept a draft
+    # whose target logit is within this of the row max instead of requiring
+    # the exact argmax — absorbs the ~1e-7 matmul-vs-GEMV accumulation gap
+    # (ROADMAP §spec).  None = exact argmax matching.
+    greedy_accept_tol: Optional[float] = None
 
     def __post_init__(self):
         if self.method not in ("ngram", "draft"):
             raise ValueError(
                 f"speculation method must be 'ngram' or 'draft', "
                 f"got {self.method!r}")
+        if self.greedy_accept_tol is not None \
+                and not self.greedy_accept_tol >= 0.0:
+            raise ValueError(
+                f"greedy_accept_tol must be >= 0 (or None for exact argmax "
+                f"acceptance), got {self.greedy_accept_tol}")
         if not 1 <= self.k <= MAX_SPEC_K:
             raise ValueError(
                 f"speculation k must be in [1, {MAX_SPEC_K}], got {self.k}")
@@ -354,42 +365,6 @@ class DraftModelSpeculator(Speculator):
     def invalidate(self, row: int) -> None:
         self._row_rid[row] = -1
         self._covered[row] = 0
-
-
-# ----------------------------------------------------------------- verify jit
-def verify_impl(model, kernels, params, first, drafts, draft_lens, cache,
-                seq_lens, block_tables, live, greedy, temps, top_ks, top_ps,
-                keys, draft_probs, *, all_greedy: bool = False):
-    """One batched verify pass — the engine jits this per layout.
-
-    ``first`` (B, 1) is each row's current input token, ``drafts`` (B, K)
-    the proposals.  The model scores all K + 1 positions in one forward
-    (the paged layout's multi-token decode routes through the chunked
-    ``paged_prefill`` kernel); ``write_lens = draft_lens + 1`` masks dead
-    rows and unproposed tail positions off the KV write path exactly like
-    bucketed-prefill padding.  ``accept_speculative`` picks the accepted
-    prefix + bonus, and rollback is the last line: ``seq_lens`` advances
-    only to the accepted position, never past it.
-
-    Returns ``(packed, cache, seq_lens)`` where ``packed`` (B, K + 2) int32
-    rows are ``[n_accepted | emitted_0 .. emitted_K]`` — the single
-    device→host transfer of the step.
-    """
-    tokens = jnp.concatenate([first, drafts], axis=1)
-    wl = jnp.where(live, draft_lens + 1, 0).astype(jnp.int32)
-    logits, cache, _ = model.apply(
-        params, {"tokens": tokens}, kernels=kernels, cache=cache,
-        seq_lens=seq_lens, mode="decode", block_tables=block_tables,
-        write_lens=wl)
-    n_acc, emitted = accept_speculative(
-        logits, drafts, draft_lens, keys, greedy=greedy, temps=temps,
-        top_ks=top_ks, top_ps=top_ps, draft_probs=draft_probs,
-        all_greedy=all_greedy)
-    n_acc = jnp.where(live, n_acc, 0)
-    emitted = jnp.where(live[:, None], emitted, 0)
-    seq_lens = jnp.where(live, seq_lens + n_acc + 1, 0)
-    packed = jnp.concatenate([n_acc[:, None], emitted], axis=1)
-    return packed.astype(jnp.int32), cache, seq_lens
 
 
 # -------------------------------------------------------------------- factory

@@ -1,0 +1,203 @@
+"""Fused-step execution tests (ISSUE 10 / DESIGN.md §18): token-budget
+property parity against the unfused reference programs, per-bucket jit
+recompile accounting, tolerance-aware greedy speculative acceptance, and the
+``q_chunk`` KernelConfig / autotune plumbing."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+from repro.configs import smoke_config
+from repro.kernels import autotune
+from repro.models import build_model
+from repro.models.layers import KernelConfig
+from repro.serving.api import EngineConfig
+from repro.serving.engine import Engine
+from repro.serving.sampler import accept_speculative
+from repro.serving.spec_decode import SpecConfig
+
+
+@functools.lru_cache(maxsize=1)
+def _lm():
+    """Module-memoized smoke model — also used by the ``@given`` property
+    tests (the hypothesis shim hides the wrapped signature from pytest, so
+    those can't take fixtures)."""
+    cfg = smoke_config("qwen3_4b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    return _lm()
+
+
+def _reference_greedy(model, params, prompt, max_new):
+    """The unfused two-program path: whole-prompt ``prefill`` then 1-token
+    ``decode_step`` calls — what the engine ran before the fused step."""
+    cache = model.init_cache(1, 96, dtype=jnp.float32)
+    lens = jnp.zeros((1,), jnp.int32)
+    logits, cache, lens = model.prefill(
+        params, {"tokens": jnp.asarray([prompt], jnp.int32)}, cache, lens)
+    toks = [int(jnp.argmax(logits[0]))]
+    for _ in range(max_new - 1):
+        logits, cache, lens = model.decode_step(
+            params, jnp.asarray([[toks[-1]]], jnp.int32), cache, lens)
+        toks.append(int(jnp.argmax(logits[0])))
+    return toks
+
+
+# --------------------------------------------------- budget-parity property
+def _check_budget_parity(layout, seed, budget, stagger):
+    """Property (ISSUE 10): for random prompt sets, random arrival
+    interleavings, and random ``max_step_tokens`` budgets, greedy output is
+    token-identical to the unfused prefill+decode reference — chunking a
+    prompt across fused steps must not change a single token."""
+    cfg, model, params = _lm()
+    rng = np.random.default_rng(seed)
+    max_new = 4
+    prompts = [rng.integers(2, cfg.vocab_size, size=int(n)).tolist()
+               for n in rng.integers(3, 24, size=3)]
+    eng = Engine(model, params, EngineConfig(
+        batch_slots=2, max_len=96, eos_id=-1, cache=layout, page_size=4,
+        max_step_tokens=budget))
+    rids, fin = {}, []
+    for i, p in enumerate(prompts):
+        rids[eng.submit(p, max_new_tokens=max_new)] = i
+        # interleave arrivals with engine progress per the stagger bits
+        for _ in range((stagger >> (2 * i)) & 3):
+            fin += eng.step()
+    done = {f.rid: f.output for f in fin + eng.run()}
+    assert done.keys() == rids.keys()
+    for rid, i in rids.items():
+        expect = _reference_greedy(model, params, prompts[i], max_new)
+        assert done[rid] == expect, (layout, budget, i)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(4, 40), st.integers(0, 255))
+@settings(max_examples=4, deadline=None)
+def test_budgeted_greedy_matches_unfused_slot(seed, budget, stagger):
+    _check_budget_parity("slot", seed, budget, stagger)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(4, 40), st.integers(0, 255))
+@settings(max_examples=4, deadline=None)
+def test_budgeted_greedy_matches_unfused_paged(seed, budget, stagger):
+    _check_budget_parity("paged", seed, budget, stagger)
+
+
+# ------------------------------------------------------- recompile accounting
+def test_fused_program_compiles_once_per_bucket_mixed_traffic(small_lm,
+                                                              monkeypatch):
+    """Under mixed traffic — long chunked prefills landing alongside live
+    decodes — the fused program traces once per step-width bucket, not per
+    chunk length or batch composition."""
+    cfg, model, params = small_lm
+    traces = {"n": 0}
+    orig = Engine._fused_step_impl
+
+    def counting(*args, **kwargs):
+        traces["n"] += 1                       # runs once per jit trace
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(Engine, "_fused_step_impl", staticmethod(counting))
+    eng = Engine(model, params, EngineConfig(
+        batch_slots=2, max_len=96, eos_id=-1, cache="paged", page_size=4,
+        max_step_tokens=16))
+    rng = np.random.default_rng(7)
+    for n in (40, 10, 3):                      # chunks of 16/8/10/3 tokens
+        eng.submit(rng.integers(2, cfg.vocab_size, size=n).tolist(),
+                   max_new_tokens=4)
+    done = eng.run()
+    assert len(done) == 3 and all(len(f.output) == 4 for f in done)
+    # every chunk width <= 16 shares the 32-wide bucket; decode-only steps
+    # use the 1-wide bucket — exactly two traces for the whole run
+    assert traces["n"] == 2, traces["n"]
+
+
+# ------------------------------------------- tolerance-aware greedy acceptance
+def test_greedy_tolerance_accepts_near_tied_argmax():
+    """Regression for the documented ~1e-7 multi-token-vs-GEMV logit gap
+    (ROADMAP §spec): the fused step scores drafts through the multi-token
+    matmul lane while the drafts came from single-token GEMV decodes, whose
+    different accumulation order can flip near-tied argmaxes.  Exact
+    acceptance rejects such a draft; tolerance-aware acceptance keeps it."""
+    v, k = 8, 2
+    logits = np.full((1, k + 1, v), -5.0, np.float32)
+    # position 0: draft token 3 sits 5e-8 below the argmax (token 4) — the
+    # matmul-lane replay of a GEMV-lane argmax tie
+    logits[0, 0, 4] = 0.0
+    logits[0, 0, 3] = -5e-8
+    logits[0, 1, 6] = 1.0            # position 1: draft 6 is the exact argmax
+    logits[0, 2, 2] = 1.0            # bonus distribution argmax = 2
+    drafts = jnp.asarray([[3, 6]], jnp.int32)
+    lens = jnp.asarray([2], jnp.int32)
+
+    n_exact, e_exact = accept_speculative(jnp.asarray(logits), drafts, lens,
+                                          all_greedy=True)
+    assert int(n_exact[0]) == 0              # 5e-8 flip kills the whole chain
+    assert e_exact[0].tolist() == [4, 0, 0]
+
+    n_tol, e_tol = accept_speculative(jnp.asarray(logits), drafts, lens,
+                                      all_greedy=True, greedy_tol=1e-7)
+    assert int(n_tol[0]) == 2                # both drafts survive the gap
+    # the bonus token stays the exact argmax — tolerance never widens it
+    assert e_tol[0].tolist() == [3, 6, 2]
+
+    # a gap larger than the tolerance still rejects
+    logits[0, 0, 3] = -1e-3
+    n_far, _ = accept_speculative(jnp.asarray(logits), drafts, lens,
+                                  all_greedy=True, greedy_tol=1e-7)
+    assert int(n_far[0]) == 0
+
+
+def test_greedy_tolerance_engine_knob(small_lm):
+    """``SpecConfig.greedy_accept_tol`` threads end-to-end: with a tolerance
+    far below the smoke model's logit gaps, speculative greedy output is
+    identical to exact acceptance; the knob itself validates its domain."""
+    cfg, model, params = small_lm
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(2, cfg.vocab_size, size=n).tolist()
+               for n in (12, 7)]
+
+    def run(tol):
+        eng = Engine(model, params, EngineConfig(
+            batch_slots=2, max_len=96, eos_id=-1, cache="paged", page_size=4,
+            speculation=SpecConfig(method="ngram", k=3,
+                                   greedy_accept_tol=tol)))
+        return [f.output for f in eng.generate(prompts, max_new_tokens=6,
+                                               ignore_eos=True)]
+
+    assert run(None) == run(1e-6)
+    with pytest.raises(ValueError, match="greedy_accept_tol"):
+        SpecConfig(greedy_accept_tol=-1e-7)
+
+
+# --------------------------------------------------------- q_chunk validation
+def test_kernel_config_q_chunk_validation():
+    for ok in (None, "auto", 128, 256, 512):
+        assert KernelConfig(q_chunk=ok).q_chunk == ok
+    for bad in (0, -128, 64, 100, 129, True):
+        with pytest.raises(ValueError, match="q_chunk"):
+            KernelConfig(q_chunk=bad)
+
+
+def test_autotune_q_chunk_cached_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.setenv(autotune.ENV_CACHE, str(tmp_path / "autotune.json"))
+    autotune.clear_memory_cache()
+    s, h, hkv, d, ps = 256, 4, 2, 16, 8
+    qc = autotune.get_q_chunk(s, h, hkv, d, ps)
+    assert qc in autotune.q_chunk_candidates(s)
+    assert qc % 128 == 0
+    timed = len(autotune.timed_keys)
+    assert autotune.get_q_chunk(s, h, hkv, d, ps) == qc   # memory hit
+    autotune.clear_memory_cache()
+    assert autotune.get_q_chunk(s, h, hkv, d, ps) == qc   # file hit
+    assert len(autotune.timed_keys) == timed              # no re-timing
+    # candidates never exceed the suffix bucket: a 64-token suffix has only
+    # the lane-minimum tile
+    assert autotune.q_chunk_candidates(64) == [128]

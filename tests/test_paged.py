@@ -387,18 +387,18 @@ def test_engine_paged_admits_beyond_slot_reservation(small_lm):
 
 
 def test_engine_paged_prefill_recompiles_are_bucketed(small_lm, monkeypatch):
-    """Distinct prompt lengths inside one bucket share a single prefill
-    trace (the padded positions' writes go to the null page) — the paged
-    path must not recompile per exact suffix length."""
+    """Distinct prompt lengths inside one step-width bucket share a single
+    fused-step trace (the padded positions' writes go to the null page) —
+    the paged path must not recompile per exact chunk length."""
     cfg, model, params = small_lm
     traces = {"n": 0}
-    orig = Engine._prefill_paged_impl
+    orig = Engine._fused_step_impl
 
     def counting(*args, **kwargs):
         traces["n"] += 1                       # runs once per jit trace
         return orig(*args, **kwargs)
 
-    monkeypatch.setattr(Engine, "_prefill_paged_impl", staticmethod(counting))
+    monkeypatch.setattr(Engine, "_fused_step_impl", staticmethod(counting))
     eng = Engine(model, params, batch_slots=4, max_len=64, eos_id=-1,
                  cache="paged", page_size=4)
     rng = np.random.default_rng(6)
@@ -409,7 +409,8 @@ def test_engine_paged_prefill_recompiles_are_bucketed(small_lm, monkeypatch):
         outs[rid] = n
     done = eng.run()
     assert len(done) == 4
-    assert traces["n"] == 1, traces["n"]
+    # one trace for the width-32 prefill step, one for width-1 decode steps
+    assert traces["n"] == 2, traces["n"]
 
     # parity against the slot engine for the same bucketed workload
     eng_s = Engine(model, params, batch_slots=4, max_len=64, eos_id=-1)

@@ -93,7 +93,10 @@ def test_engine_fused_step_matches_unfused_reference(small_lm):
     for sp, plen in zip(sps, (5, 8, 11)):
         eng.submit(rng.integers(2, cfg.vocab_size, size=plen).tolist(),
                    max_new_tokens=4, sampling=sp)
-    eng._admit([])                        # prefill all three into their slots
+    eng._admit([])        # reserve slots; prompts stream in as fused chunks
+    eng.step()            # unbudgeted: one step lands all prompts + tok 0
+    assert all(a.output and not a.pending_prefill
+               for a in eng.sched.active.values())
     # deep-copy the snapshot: the engine donates its cache buffers into the
     # jitted step (on backends with donation), so the live tree is invalid
     # as a reference input after eng.step()

@@ -220,6 +220,26 @@ def test_tp_greedy_parity_pallas_kernels(qlm):
     assert r1 == r2
 
 
+@needs2
+def test_tp_speculative_greedy_parity(qlm):
+    """Speculation now runs under TP (ISSUE 10: the fused step is the one
+    shard_map'd program, so the verify chunk needs no second wrapper):
+    greedy spec output at tp=2 must match both its tp=1 twin and the
+    non-speculative tp=2 engine."""
+    from repro.serving.spec_decode import SpecConfig
+    _, model, qparams = qlm
+
+    def spec_engine(tp):
+        return Engine(model, qparams, EngineConfig(
+            batch_slots=4, max_len=96, eos_id=-1, cache="paged",
+            page_size=16, speculation=SpecConfig(method="ngram", k=3),
+            mesh_shape=(tp,) if tp > 1 else None))
+
+    plain = _greedy(_engine(model, qparams, 2))
+    s1, s2 = _greedy(spec_engine(1)), _greedy(spec_engine(2))
+    assert s1 == s2 == plain
+
+
 # the shim @given hides the test signature from pytest's fixture
 # resolution, so the long-lived engine pair is a cached helper, not a fixture
 @functools.lru_cache(maxsize=1)
